@@ -1,0 +1,88 @@
+"""Paper Figure 2 analog: op performance vs input shape.
+
+The paper profiles Conv2D over 16 values of the input-channel argument and
+observes (a) timing stability (std-err < 1% of mean) and (b) a strong linear
+relationship to input size.  Our workload's Conv2D-equivalent is the matmul:
+we sweep the contraction dim K over 16 values at fixed (M, N), and the
+elementwise/reduction families over 16 sizes, reporting std/mean and the
+linear-fit R^2 per family.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.database import ProfileDB
+from repro.core.profiler import OfflineProfiler, time_callable
+
+
+def run(values_per_arg: int = 16, repeats: int = 10) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    # matmul: M=N=512 fixed, K swept over 16 values (Fig 2's channel sweep)
+    m = n = 512
+    ks = [64 * i for i in range(1, values_per_arg + 1)]
+    times, fl = [], []
+    for k in ks:
+        a = jnp.ones((m, k), jnp.float32)
+        b = jnp.ones((k, n), jnp.float32)
+        f = jax.jit(lambda a, b: a @ b)
+        mean, std = time_callable(lambda: f(a, b).block_until_ready(), repeats)
+        times.append((mean, std))
+        fl.append(2.0 * m * k * n)
+        rows.append(
+            {
+                "name": f"fig2_matmul_k{k}",
+                "us_per_call": mean * 1e6,
+                "derived": f"std_over_mean={std / mean:.4f}",
+            }
+        )
+    x = np.asarray(fl)
+    y = np.asarray([t[0] for t in times])
+    r2 = _linear_r2(x, y)
+    stab = float(np.median([s / m_ for m_, s in times]))
+    rows.append(
+        {
+            "name": "fig2_matmul_linearity",
+            "us_per_call": float(y.mean() * 1e6),
+            "derived": f"r2={r2:.4f};median_std_over_mean={stab:.4f}",
+        }
+    )
+
+    # elementwise + reduction families over 16 sizes
+    sizes = [2 ** p for p in range(10, 10 + values_per_arg)]
+    for fam, op in (
+        ("exp", jnp.exp),
+        ("add", lambda v: v + v),
+        ("reduce", jnp.sum),
+    ):
+        f = jax.jit(op)
+        ts = []
+        for s in sizes:
+            v = jnp.ones((s,), jnp.float32)
+            mean, std = time_callable(lambda: f(v).block_until_ready(), repeats)
+            ts.append(mean)
+        r2 = _linear_r2(np.asarray(sizes, float), np.asarray(ts))
+        rows.append(
+            {
+                "name": f"fig2_{fam}_linearity",
+                "us_per_call": float(np.mean(ts) * 1e6),
+                "derived": f"r2={r2:.4f}",
+            }
+        )
+    return rows
+
+
+def _linear_r2(x: np.ndarray, y: np.ndarray) -> float:
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = A @ coef
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2))
+    return 1.0 - ss_res / max(ss_tot, 1e-30)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")

@@ -1,0 +1,126 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables.
+
+Produces the §Dry-run and §Roofline tables for EXPERIMENTS.md.  The memory
+term is reported twice: ``as-compiled`` (HloCostAnalysis convention over the
+CPU-lowered HLO, where XLA upcasts bf16 compute to f32) and a
+``bf16-native`` estimate that halves floating-point traffic (the TPU
+lowering keeps bf16 end-to-end) — the truth for a real v5e lowering lies
+between the two; both are upper-bounded by the same convention XLA itself
+reports.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(dryrun_dir: Optional[str] = None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir or DRYRUN_DIR, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | status | temp GiB/dev | args GiB/dev "
+        "| HLO GFLOP/dev | coll ICI GB | coll DCN GB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} "
+                f"| {r['status']}: {r.get('reason', r.get('error', ''))[:60]} "
+                "| | | | | | |"
+            )
+            continue
+        s = r["summary"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | ok "
+            f"| {fmt_bytes(r['memory']['temp_size_in_bytes'])} "
+            f"| {fmt_bytes(r['memory']['argument_size_in_bytes'])} "
+            f"| {s['flops'] / 1e9:.1f} "
+            f"| {s['collective_bytes_ici'] / 1e9:.2f} "
+            f"| {s['collective_bytes_dcn'] / 1e9:.2f} "
+            f"| {r['compile_s']} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s (raw / bf16-est) | collective s "
+        "| dominant | MODEL_TF | useful ratio | bound s | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            if r["status"] == "skipped" and r["mesh"] == mesh:
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — "
+                    f"| — | {r['reason'][:70]} |"
+                )
+            continue
+        rl = r["roofline"]
+        mem_bf16 = rl["memory_s"] / 2
+        note = _bottleneck_note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4g} "
+            f"| {rl['memory_s']:.4g} / {mem_bf16:.4g} "
+            f"| {rl['collective_s']:.4g} | {rl['dominant']} "
+            f"| {rl['model_flops_global'] / 1e12:.0f} "
+            f"| {rl['useful_flop_ratio']:.3f} | {rl['bound_time_s']:.4g} "
+            f"| {note} |"
+        )
+    return "\n".join(lines)
+
+
+def _bottleneck_note(r: dict) -> str:
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    if dom == "collective":
+        return "reduce collective payload (sharding/compression/overlap)"
+    if dom == "memory":
+        if r["shape"].startswith("decode") or r["shape"].startswith("long"):
+            return "KV/state reads dominate: quantized cache or wider batch"
+        return "activation traffic: remat policy / fusion / bf16"
+    return "MXU-bound: increase per-chip arithmetic intensity"
+
+
+def pick_hillclimb(recs: list[dict]) -> list[tuple[str, str, str]]:
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "single"]
+    coll = max(
+        ok, key=lambda r: r["roofline"]["collective_s"] / max(
+            r["roofline"]["bound_time_s"], 1e-12
+        )
+    )
+    trains = [r for r in ok if r["shape"] == "train_4k"]
+    worst = min(trains, key=lambda r: r["roofline"]["useful_flop_ratio"])
+    return [
+        (coll["arch"], coll["shape"], "most collective-bound"),
+        (worst["arch"], worst["shape"], "worst useful-flop ratio (train)"),
+    ]
+
+
+def main() -> None:
+    recs = load()
+    print("## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Hillclimb candidates\n")
+    for a, s, why in pick_hillclimb(recs):
+        print(f"- {a} x {s}: {why}")
+
+
+if __name__ == "__main__":
+    main()

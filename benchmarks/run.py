@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_op_profiling  — Figure 2 (op perf vs shape: stability + linearity)
+  bench_comm          — Table 1 (interconnect throughput per collective)
+  bench_sim_accuracy  — Table 2 (simulated vs measured iteration time)
+  bench_autotune      — beyond-paper: strategy search via simulation
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_autotune,
+        bench_comm,
+        bench_op_profiling,
+        bench_sim_accuracy,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (bench_op_profiling, bench_comm, bench_sim_accuracy,
+                bench_autotune):
+        try:
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}",
+                      flush=True)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{mod.__name__},0.00,ERROR:{type(e).__name__}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

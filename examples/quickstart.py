@@ -1,0 +1,42 @@
+"""Quickstart: build an assigned architecture, train a few steps, decode.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, smoke_variant, smoke_shape
+from repro.models import build_model, make_concrete_batch
+from repro.optim import cosine_with_warmup, make_optimizer
+from repro.serve import Request, ServeEngine
+from repro.train import make_train_step
+from repro.train.step import init_state
+
+
+def main():
+    # 1. any assigned arch is a config away (reduced here for CPU)
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    model = build_model(cfg)
+
+    # 2. a few real train steps
+    opt = make_optimizer(cfg.optimizer)
+    step = jax.jit(
+        make_train_step(model, opt, cosine_with_warmup(3e-3, 2, 100)),
+        donate_argnums=(0,),
+    )
+    state, _ = init_state(model, jax.random.PRNGKey(0), opt)
+    batch = make_concrete_batch(cfg, smoke_shape("train"))
+    for i in range(10):
+        state, metrics = step(state, batch)
+        print(f"step {i}: loss={float(metrics['loss']):.4f}")
+
+    # 3. serve with the trained weights
+    engine = ServeEngine(model, state.params, slots=2, max_len=64)
+    engine.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                          max_new_tokens=8))
+    done = engine.run_until_done()
+    print("decoded:", done[0].output)
+
+
+if __name__ == "__main__":
+    main()

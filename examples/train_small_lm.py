@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Exercises the full production path on this host: data pipeline, sharded
+train step, checkpoint/restart (kill it mid-run and re-launch: it resumes
+from the newest valid checkpoint and regenerates identical data), heartbeat
+and straggler telemetry.
+
+    PYTHONPATH=src python examples/train_small_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # ~100M llama-style config: 12L x 768 wide, vocab 32k
+    cfg = dataclasses.replace(
+        get_config("llama3.2-1b"),
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32_000,
+        tie_embeddings=True,
+        remat_policy="none",
+        grad_accum=1,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    print(f"params: {cfg.num_params() / 1e6:.1f}M")
+    train(
+        cfg,
+        steps=args.steps,
+        seq=args.seq,
+        batch=args.batch,
+        lr=6e-4,
+        warmup=20,
+        ckpt_dir=args.ckpt_dir,
+        log_every=5,
+        ckpt_every=25,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""The paper's contribution: offline-profiling-based performance simulation.
+
+Pipeline:  compiled HLO --(hlo_parser)--> DataflowGraph
+           --(estimator + ProfileDB)--> per-op durations
+           --(simulator)--> makespan / timelines
+           --(autotuner)--> best parallelization strategy
+"""
+from repro.core.database import ProfileDB, ProfileEntry  # noqa: F401
+from repro.core.estimator import OpTimeEstimator, fit_time_model  # noqa: F401
+from repro.core.graph import DataflowGraph, OpNode  # noqa: F401
+from repro.core.hardware import (  # noqa: F401
+    CPU_HOST,
+    PLATFORMS,
+    TPU_V5E,
+    collective_time,
+    wire_bytes,
+)
+from repro.core.hlo_parser import (  # noqa: F401
+    MeshInfo,
+    module_summary,
+    parse_module,
+    to_graph,
+)
+from repro.core.newop import NewOpProfiler  # noqa: F401
+from repro.core.profiler import OfflineProfiler, calibrate_host  # noqa: F401
+from repro.core.roofline import RooflineReport, build_report, model_flops  # noqa: F401
+from repro.core.simulator import SimResult, Simulator, simulate  # noqa: F401
+from repro.core.strategy import LayerCost, Strategy, pipeline_graph  # noqa: F401
+from repro.core.timeline import to_chrome_trace  # noqa: F401
+from repro.core.autotuner import Autotuner, TuneResult, layer_cost_from_config  # noqa: F401

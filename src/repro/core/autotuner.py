@@ -1,0 +1,148 @@
+"""Strategy autotuner: the paper's motivating MLOps use case.
+
+"systems like PipeDream and FlexFlow can use it to rapidly find the optimal
+parallelization strategy for any DNN, hardware, and hyperparameter settings
+without the high overheads of online profiling."
+
+Given a per-layer cost profile (derivable from one parsed layer graph or from
+``ArchConfig`` analytically) and a chip budget, enumerate (dp x tp x pp x
+microbatch x schedule) candidates, simulate each pipeline step with the DES
+engine, and rank by simulated makespan.  Also supports straggler injection —
+slow down one stage by a factor — which drives the backup-step policy in
+``repro.ft``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.estimator import OpTimeEstimator
+from repro.core.graph import OpNode
+from repro.core.hardware import PlatformSpec, TPU_V5E
+from repro.core.simulator import Simulator, default_device_fn
+from repro.core.strategy import LayerCost, Strategy, pipeline_graph
+
+
+def layer_cost_from_config(
+    cfg: ArchConfig, batch: int, seq: int, tp: int, dtype_bytes: int = 2
+) -> LayerCost:
+    """Analytic per-layer cost for one microbatch, per tp shard."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    qkv = 2.0 * batch * seq * d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+    attn = 4.0 * batch * seq * seq * cfg.num_heads * hd  # scores + out
+    proj = 2.0 * batch * seq * cfg.num_heads * hd * d
+    if cfg.moe is not None:
+        e = cfg.moe
+        ffn = 6.0 * batch * seq * d * e.d_ff_expert * (e.top_k + e.num_shared_experts)
+    else:
+        ffn = 6.0 * batch * seq * d * cfg.d_ff
+    flops = (qkv + attn + proj + ffn) / tp
+    act_bytes = dtype_bytes * batch * seq * d
+    layer_params = (
+        cfg.num_params() - 2 * cfg.vocab_size * d
+    ) / max(cfg.num_layers, 1)
+    return LayerCost(
+        fwd_flops=flops,
+        fwd_bytes=4.0 * act_bytes / tp + layer_params * dtype_bytes / tp,
+        bwd_multiplier=2.0,
+        boundary_bytes=act_bytes,
+        grad_bytes=layer_params * dtype_bytes / tp,
+    )
+
+
+@dataclass
+class TuneResult:
+    strategy: Strategy
+    makespan_s: float
+    bubble_fraction: float
+    comm_fraction: float
+
+
+@dataclass
+class Autotuner:
+    cfg: ArchConfig
+    chips: int
+    global_batch: int
+    seq: int
+    platform: PlatformSpec = TPU_V5E
+    estimator: Optional[OpTimeEstimator] = None
+    straggler_stage: Optional[int] = None
+    straggler_factor: float = 1.0
+
+    def __post_init__(self):
+        if self.estimator is None:
+            self.estimator = OpTimeEstimator(self.platform)
+
+    # -- candidate enumeration --------------------------------------------------
+
+    def candidates(
+        self, max_pp: int = 16, microbatch_options=(1, 2, 4, 8, 16, 32)
+    ) -> list[Strategy]:
+        out = []
+        L = self.cfg.num_layers
+        for pp in [p for p in (1, 2, 4, 8, 16) if p <= max_pp and L % p == 0]:
+            rem = self.chips // pp
+            if rem * pp != self.chips:
+                continue
+            for tp in (1, 2, 4, 8, 16):
+                if tp > rem or rem % tp != 0:
+                    continue
+                dp = rem // tp
+                if self.global_batch % dp != 0:
+                    continue
+                for mb in microbatch_options:
+                    per_dp = self.global_batch // dp
+                    if per_dp % mb != 0:
+                        continue
+                    for sched in ("gpipe", "1f1b") if pp > 1 else ("1f1b",):
+                        out.append(
+                            Strategy(
+                                dp=dp, tp=tp, pp=pp,
+                                microbatches=mb, schedule=sched,
+                            )
+                        )
+        return out
+
+    # -- simulation ---------------------------------------------------------------
+
+    def evaluate(self, strategy: Strategy) -> TuneResult:
+        micro_bs = self.global_batch // strategy.dp // strategy.microbatches
+        cost = layer_cost_from_config(
+            self.cfg, micro_bs, self.seq, strategy.tp
+        )
+        g = pipeline_graph(self.cfg.num_layers, cost, strategy)
+
+        est = self.estimator
+
+        def duration(node: OpNode) -> float:
+            t = est.duration(node)
+            if (
+                self.straggler_stage is not None
+                and node.device == f"stage{self.straggler_stage}"
+            ):
+                t *= self.straggler_factor
+            return t
+
+        res = Simulator(duration, default_device_fn, record_events=False).run(g)
+        stage_busy = [
+            t for d, t in res.device_busy.items() if d.startswith("stage")
+        ]
+        comm = sum(
+            t for d, t in res.device_busy.items() if d.startswith("link")
+        )
+        max_busy = max(stage_busy) if stage_busy else 0.0
+        bubble = 1.0 - max_busy / res.makespan if res.makespan > 0 else 0.0
+        return TuneResult(
+            strategy=strategy,
+            makespan_s=res.makespan,
+            bubble_fraction=bubble,
+            comm_fraction=comm / res.makespan if res.makespan else 0.0,
+        )
+
+    def search(self, **kw) -> list[TuneResult]:
+        results = [self.evaluate(s) for s in self.candidates(**kw)]
+        results.sort(key=lambda r: r.makespan_s)
+        return results

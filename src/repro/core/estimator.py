@@ -1,0 +1,281 @@
+"""Op-time estimator (paper §2): profiling-DB lookup -> learned model ->
+analytic roofline fallback.
+
+The paper: "for each input argument we profile a fixed number of values, and
+use these results to train a neural network to estimate the op performance."
+Here the learned model is a small MLP (2x32, JAX, full-batch Adam) regressing
+``log(time)`` on ``[log1p(flops), log1p(bytes)]`` per platform, trained on
+all profiled points of the platform.  It captures the dispatch-overhead +
+throughput structure that a pure roofline misses on a real host.
+
+Fallback chain per graph node:
+  1. exact DB hit for (op_family, args)            — paper's database query
+  2. learned regression on (flops, bytes)          — paper's NN estimator
+  3. analytic roofline max(flops/peak, bytes/bw)   — spec-sheet platforms
+     (+ ring-model collective time on the link class)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.database import ProfileDB
+from repro.core.graph import OpNode
+from repro.core.hardware import PlatformSpec, collective_time
+
+
+# ---------------------------------------------------------------------------
+# Learned regressor (tiny JAX MLP)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MLPModel:
+    w1: np.ndarray
+    b1: np.ndarray
+    w2: np.ndarray
+    b2: np.ndarray
+    x_mean: np.ndarray
+    x_std: np.ndarray
+
+    def predict_log_time(self, feats: np.ndarray) -> np.ndarray:
+        x = (feats - self.x_mean) / self.x_std
+        h = np.tanh(x @ self.w1 + self.b1)
+        return (h @ self.w2 + self.b2)[..., 0]
+
+    def predict(self, flops: float, nbytes: float) -> float:
+        f = np.asarray([[math.log1p(flops), math.log1p(nbytes)]])
+        return float(np.exp(self.predict_log_time(f)[0]))
+
+
+def fit_time_model(
+    points: list[tuple[float, float, float]],
+    hidden: int = 32,
+    steps: int = 800,
+    seed: int = 0,
+) -> Optional[MLPModel]:
+    """points: (flops, bytes, mean_s). Trains log-time MLP with Adam."""
+    if len(points) < 8:
+        return None
+    import jax
+    import jax.numpy as jnp
+
+    arr = np.asarray(points, dtype=np.float64)
+    X = np.stack([np.log1p(arr[:, 0]), np.log1p(arr[:, 1])], axis=1)
+    y = np.log(np.maximum(arr[:, 2], 1e-9))
+    xm, xs = X.mean(0), X.std(0) + 1e-6
+    Xn = (X - xm) / xs
+
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": jax.random.normal(k1, (2, hidden)) * 0.5,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, 1)) * 0.5,
+        "b2": jnp.zeros((1,)),
+    }
+    Xj, yj = jnp.asarray(Xn), jnp.asarray(y)
+
+    def loss(p):
+        h = jnp.tanh(Xj @ p["w1"] + p["b1"])
+        pred = (h @ p["w2"] + p["b2"])[:, 0]
+        return jnp.mean((pred - yj) ** 2)
+
+    lr = 3e-2
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(carry, i):
+        p, m, v = carry
+        g = jax.grad(loss)(p)
+        m = jax.tree_util.tree_map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1
+        p = jax.tree_util.tree_map(
+            lambda pp, mm, vv: pp
+            - lr * (mm / (1 - 0.9**t)) / (jnp.sqrt(vv / (1 - 0.999**t)) + 1e-8),
+            p, m, v,
+        )
+        return (p, m, v), None
+
+    import jax.lax as lax
+
+    (params, _, _), _ = lax.scan(
+        step, (params, m, v), jnp.arange(steps)
+    )
+    return MLPModel(
+        w1=np.asarray(params["w1"]),
+        b1=np.asarray(params["b1"]),
+        w2=np.asarray(params["w2"]),
+        b2=np.asarray(params["b2"]),
+        x_mean=xm,
+        x_std=xs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Estimator
+# ---------------------------------------------------------------------------
+
+# graph-node kind -> profiling-DB op family
+_FAMILY = {
+    "dot": "dot",
+    "convolution": "dot",
+    "reduce": "reduce",
+    "gather": "gather",
+    "dynamic-update-slice": "dynamic-update-slice",
+}
+
+# which DB op families feed which learned model — per-family regressors, the
+# paper trains one estimator per op
+_MODEL_SOURCES = {
+    "dot": ("dot",),
+    "reduce": ("reduce", "softmax"),
+    "__vector__": ("add", "mul", "relu", "exp", "tanh", "rsqrt", "copy"),
+    "gather": ("gather",),
+    "dynamic-update-slice": ("dynamic-update-slice",),
+}
+
+
+def _model_key_for(kind: str) -> str:
+    if kind in ("dot", "convolution"):
+        return "dot"
+    if kind == "reduce":
+        return "reduce"
+    if kind == "gather":
+        return "gather"
+    if kind == "dynamic-update-slice":
+        return "dynamic-update-slice"
+    return "__vector__"  # fusions, converts, elementwise, everything else
+
+
+class OpTimeEstimator:
+    def __init__(
+        self,
+        platform: PlatformSpec,
+        db: Optional[ProfileDB] = None,
+        use_learned: bool = True,
+        new_op_profiler=None,
+    ):
+        self.platform = platform
+        self.db = db
+        self.new_op_profiler = new_op_profiler
+        self.models: dict[str, MLPModel] = {}
+        self.dispatch_s = 0.0
+        self.op_overhead_s = 0.0
+        if db is not None:
+            self.dispatch_s = float(
+                db.meta(platform.name).get("dispatch_s", 0.0)
+            )
+            self.op_overhead_s = float(
+                db.meta(platform.name).get("op_overhead_s", 0.0)
+            )
+            if use_learned:
+                for key, fams in _MODEL_SOURCES.items():
+                    pts = [
+                        (
+                            e.flops,
+                            e.bytes,
+                            max(e.mean_s - self.dispatch_s, 1e-8),
+                        )
+                        for fam in fams
+                        for e in db.entries(platform.name, fam)
+                        if e.mean_s > 0 and (e.flops > 0 or e.bytes > 0)
+                    ]
+                    m = fit_time_model(pts, seed=hash(key) % 2**31)
+                    if m is not None:
+                        self.models[key] = m
+        self.stats = {"db": 0, "learned": 0, "analytic": 0, "newop": 0}
+
+    # -- per-node ----------------------------------------------------------------
+
+    def duration(self, node: OpNode) -> float:
+        if node.is_collective:
+            return self._collective(node)
+        if node.flops == 0 and node.bytes_accessed == 0:
+            return 0.0
+        # 1. exact DB hit — either op-family args or a (flops, bytes)
+        # signature previously measured by the new-op profiler
+        if self.db is not None:
+            fam = _FAMILY.get(node.kind)
+            args = node.meta.get("db_args")
+            if fam is not None and args:
+                e = self.db.lookup(self.platform.name, fam, args)
+                if e is not None:
+                    self.stats["db"] += 1
+                    return e.mean_s
+            sig = {
+                "flops": int(node.flops),
+                "bytes": int(node.bytes_accessed),
+            }
+            e = self.db.lookup(self.platform.name, node.kind, sig)
+            if e is not None:
+                self.stats["db"] += 1
+                return e.mean_s
+        # 2. learned per-family model, clamped to an analytic trust region
+        # (an MLP extrapolating outside its training manifold — e.g. a
+        # zero-flop copy when all training points had flops>0 — must not be
+        # able to predict absurd times)
+        model = self.models.get(_model_key_for(node.kind))
+        if model is not None and not node.meta.get("folded"):
+            self.stats["learned"] += 1
+            t = max(model.predict(node.flops, node.bytes_accessed), 0.0)
+            anchor = self._analytic(node, include_dispatch=False)
+            t = float(min(max(t, 0.25 * anchor), 50.0 * anchor + 1e-4))
+            return t + self.op_overhead_s
+        # 3. new-op online fallback (inserts into the DB)
+        if self.new_op_profiler is not None:
+            t = self.new_op_profiler.try_profile(node)
+            if t is not None:
+                self.stats["newop"] += 1
+                return t
+        # 4. analytic roofline
+        self.stats["analytic"] += 1
+        return self._analytic(node)
+
+    def _analytic(self, node: OpNode, include_dispatch: bool = True) -> float:
+        chip = self.platform.chip
+        eff = (
+            chip.gemm_efficiency
+            if node.kind in ("dot", "convolution")
+            else chip.vector_efficiency
+        )
+        t_flops = node.flops / (chip.peak_flops * eff) if node.flops else 0.0
+        t_bytes = node.bytes_accessed / chip.hbm_bw
+        base = max(t_flops, t_bytes)
+        if not include_dispatch:
+            return base
+        if node.meta.get("folded"):
+            # folded while: the dispatch overhead applies per iteration
+            base += self.dispatch_s * node.meta.get("trips", 1)
+            # folded comm time appended sequentially
+            if node.comm_bytes:
+                base += collective_time(
+                    "all-reduce", node.comm_bytes, node.group_size,
+                    self.platform.link_for(node.link_kind or "ici"),
+                )
+            return base
+        return base + self.dispatch_s
+
+    def _collective(self, node: OpNode) -> float:
+        link = self.platform.link_for(node.link_kind)
+        # 1. exact DB hit (measured collectives on this platform)
+        if self.db is not None:
+            e = self.db.lookup(
+                self.platform.name,
+                node.kind,
+                {
+                    "per_device_bytes": int(node.comm_bytes),
+                    "devices": node.group_size,
+                },
+            )
+            if e is not None:
+                self.stats["db"] += 1
+                return e.mean_s
+        return collective_time(
+            node.kind, node.comm_bytes, node.group_size, link
+        )

@@ -1,0 +1,366 @@
+"""Offline op-level profiler (paper §2 "Op-level profiling").
+
+Profiles the basic execution units of LM workloads — matmul, elementwise,
+transcendental, reduction, gather, dynamic-update-slice, and (when more than
+one XLA device is visible) the collectives — over a grid of argument values
+(the paper uses 16 values per argument; configurable here), and records
+mean/std timings into the :class:`ProfileDB`.
+
+Also provides :func:`calibrate_host`: fits achievable peak FLOP/s and memory
+bandwidth for the host platform from the measurements (the analytic terms the
+estimator uses for ops it has no direct profile for).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.database import ProfileDB, ProfileEntry
+from repro.core.hardware import CPU_HOST, ChipSpec, LinkSpec, PlatformSpec
+
+
+def time_callable(
+    fn: Callable[[], object], repeats: int = 10, warmup: int = 3
+) -> tuple[float, float]:
+    """(mean_s, std_s) of fn(); fn must block until its result is ready."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    a = np.asarray(ts)
+    return float(a.mean()), float(a.std())
+
+
+def _grid(values: Iterable[int], n: int) -> list[int]:
+    vals = sorted(set(values))
+    if len(vals) <= n:
+        return vals
+    idx = np.linspace(0, len(vals) - 1, n).round().astype(int)
+    return [vals[i] for i in idx]
+
+
+DEFAULT_MATMUL_GRID = [64, 128, 256, 512, 1024, 2048]
+DEFAULT_VECTOR_SIZES = [2**p for p in range(10, 25, 2)]
+
+
+class OfflineProfiler:
+    """Populates a ProfileDB for the *current* JAX backend."""
+
+    def __init__(
+        self,
+        db: ProfileDB,
+        platform: str = "cpu_host",
+        repeats: int = 10,
+        dtype=jnp.float32,
+    ):
+        self.db = db
+        self.platform = platform
+        self.repeats = repeats
+        self.dtype = dtype
+        self.db.meta(platform).setdefault("library", f"jax-{jax.__version__}")
+        self.db.meta(platform)["backend"] = jax.default_backend()
+        # per-call dispatch overhead: standalone op timings include one jit
+        # dispatch that ops inside a compiled program do not pay (the paper's
+        # "time gap between ops" error source) — measured once, subtracted at
+        # model-fit time.
+        tiny = jnp.ones((8,), self.dtype)
+        f = jax.jit(lambda x: x + 1.0)
+        mean, _ = time_callable(
+            lambda: f(tiny).block_until_ready(), repeats=30, warmup=5
+        )
+        self.db.meta(platform)["dispatch_s"] = mean
+        # per-op overhead INSIDE a compiled program (thunk dispatch on CPU):
+        # slope of a jitted chain of N trivial ops
+        def chain(n):
+            def g(x):
+                for _ in range(n):
+                    x = x * 1.000001 + 1e-9
+                return x
+            return jax.jit(g)
+
+        f10, f400 = chain(10), chain(400)
+        t10, _ = time_callable(lambda: f10(tiny).block_until_ready(), 20, 3)
+        t400, _ = time_callable(lambda: f400(tiny).block_until_ready(), 20, 3)
+        self.db.meta(platform)["op_overhead_s"] = max(
+            (t400 - t10) / 390.0, 0.0
+        )
+
+    # -- compute ops -----------------------------------------------------------
+
+    def profile_matmul(
+        self, sizes: Optional[list[int]] = None, values_per_arg: int = 6
+    ) -> int:
+        sizes = _grid(sizes or DEFAULT_MATMUL_GRID, values_per_arg)
+        count = 0
+        f = jax.jit(lambda a, b: a @ b)
+        for m in sizes:
+            for k in sizes:
+                for n in sizes:
+                    a = jnp.ones((m, k), self.dtype)
+                    b = jnp.ones((k, n), self.dtype)
+                    mean, std = time_callable(
+                        lambda: f(a, b).block_until_ready(), self.repeats
+                    )
+                    nb = np.dtype(self.dtype).itemsize
+                    self.db.add(
+                        self.platform,
+                        "dot",
+                        ProfileEntry(
+                            args={"m": m, "k": k, "n": n},
+                            mean_s=mean,
+                            std_s=std,
+                            n=self.repeats,
+                            flops=2.0 * m * k * n,
+                            bytes=float(nb * (m * k + k * n + m * n)),
+                        ),
+                    )
+                    count += 1
+        return count
+
+    def profile_elementwise(
+        self, sizes: Optional[list[int]] = None, values_per_arg: int = 8
+    ) -> int:
+        sizes = _grid(sizes or DEFAULT_VECTOR_SIZES, values_per_arg)
+        unary = {
+            "exp": jnp.exp,
+            "tanh": jnp.tanh,
+            "relu": jax.nn.relu,
+            "rsqrt": jax.lax.rsqrt,
+        }
+        binary = {"add": jnp.add, "mul": jnp.multiply}
+        nb = np.dtype(self.dtype).itemsize
+        count = 0
+        for name, op in unary.items():
+            f = jax.jit(op)
+            for s in sizes:
+                x = jnp.ones((s,), self.dtype)
+                mean, std = time_callable(
+                    lambda: f(x).block_until_ready(), self.repeats
+                )
+                self.db.add(
+                    self.platform, name,
+                    ProfileEntry({"size": s}, mean, std, self.repeats,
+                                 flops=float(s), bytes=float(2 * s * nb)),
+                )
+                count += 1
+        # pure data movement (flops=0): anchors the learned model for the
+        # copy/broadcast/transpose nodes that dominate scan-carry traffic
+        fcopy = jax.jit(jnp.flip)
+        for s in sizes:
+            x = jnp.ones((s,), self.dtype)
+            mean, std = time_callable(
+                lambda: fcopy(x).block_until_ready(), self.repeats
+            )
+            self.db.add(
+                self.platform, "copy",
+                ProfileEntry({"size": s}, mean, std, self.repeats,
+                             flops=0.0, bytes=float(2 * s * nb)),
+            )
+            count += 1
+        for name, op in binary.items():
+            f = jax.jit(op)
+            for s in sizes:
+                x = jnp.ones((s,), self.dtype)
+                mean, std = time_callable(
+                    lambda: f(x, x).block_until_ready(), self.repeats
+                )
+                self.db.add(
+                    self.platform, name,
+                    ProfileEntry({"size": s}, mean, std, self.repeats,
+                                 flops=float(s), bytes=float(3 * s * nb)),
+                )
+                count += 1
+        return count
+
+    def profile_reduction(
+        self, sizes: Optional[list[int]] = None, values_per_arg: int = 8
+    ) -> int:
+        sizes = _grid(sizes or DEFAULT_VECTOR_SIZES, values_per_arg)
+        f = jax.jit(jnp.sum)
+        fs = jax.jit(lambda x: jax.nn.softmax(x, axis=-1))
+        nb = np.dtype(self.dtype).itemsize
+        count = 0
+        for s in sizes:
+            x = jnp.ones((s,), self.dtype)
+            mean, std = time_callable(lambda: f(x).block_until_ready(), self.repeats)
+            self.db.add(
+                self.platform, "reduce",
+                ProfileEntry({"size": s}, mean, std, self.repeats,
+                             flops=float(s), bytes=float(s * nb)),
+            )
+            x2 = jnp.ones((max(s // 1024, 1), 1024), self.dtype)
+            mean, std = time_callable(lambda: fs(x2).block_until_ready(), self.repeats)
+            self.db.add(
+                self.platform, "softmax",
+                ProfileEntry({"size": s}, mean, std, self.repeats,
+                             flops=float(10 * s), bytes=float(2 * s * nb)),
+            )
+            count += 2
+        return count
+
+    def profile_memory_ops(
+        self, sizes: Optional[list[int]] = None, values_per_arg: int = 6
+    ) -> int:
+        sizes = _grid(sizes or DEFAULT_VECTOR_SIZES, values_per_arg)
+        nb = np.dtype(self.dtype).itemsize
+        count = 0
+        gather = jax.jit(lambda t, i: jnp.take(t, i, axis=0))
+        dus = jax.jit(
+            lambda t, u: jax.lax.dynamic_update_slice(t, u, (0,))
+        )
+        for s in sizes:
+            tbl = jnp.ones((max(s // 64, 1), 64), self.dtype)
+            idx = jnp.zeros((256,), jnp.int32)
+            mean, std = time_callable(
+                lambda: gather(tbl, idx).block_until_ready(), self.repeats
+            )
+            self.db.add(
+                self.platform, "gather",
+                ProfileEntry({"size": s}, mean, std, self.repeats,
+                             flops=0.0, bytes=float(2 * 256 * 64 * nb)),
+            )
+            t = jnp.ones((s,), self.dtype)
+            u = jnp.ones((max(s // 16, 1),), self.dtype)
+            mean, std = time_callable(
+                lambda: dus(t, u).block_until_ready(), self.repeats
+            )
+            self.db.add(
+                self.platform, "dynamic-update-slice",
+                ProfileEntry({"size": s}, mean, std, self.repeats,
+                             flops=0.0, bytes=float(2 * u.size * nb)),
+            )
+            count += 2
+        return count
+
+    # -- collectives (needs >1 device; the comm benchmark runs this in a
+    # subprocess with --xla_force_host_platform_device_count) -----------------
+
+    def profile_collectives(
+        self, sizes: Optional[list[int]] = None, values_per_arg: int = 5
+    ) -> int:
+        ndev = jax.device_count()
+        if ndev < 2:
+            return 0
+        sizes = _grid(sizes or [2**p for p in range(12, 24, 2)], values_per_arg)
+        mesh = jax.make_mesh(
+            (ndev,), ("x",), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import functools
+
+        nb = np.dtype(self.dtype).itemsize
+        count = 0
+
+        def run(name, fn, per_dev_elems):
+            nonlocal count
+            x = jax.device_put(
+                jnp.ones((ndev * per_dev_elems,), self.dtype),
+                NamedSharding(mesh, P("x")),
+            )
+            f = jax.jit(fn)
+            mean, std = time_callable(
+                lambda: jax.block_until_ready(f(x)), self.repeats
+            )
+            self.db.add(
+                self.platform, name,
+                ProfileEntry(
+                    {"per_device_bytes": per_dev_elems * nb, "devices": ndev},
+                    mean, std, self.repeats,
+                    bytes=float(per_dev_elems * nb),
+                ),
+            )
+            count += 1
+
+        def ar(x):
+            return jax.shard_map(
+                lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                in_specs=P("x"), out_specs=P(), check_vma=False,
+            )(x)
+
+        def ag(x):
+            return jax.shard_map(
+                lambda v: jax.lax.all_gather(v, "x", tiled=True), mesh=mesh,
+                in_specs=P("x"), out_specs=P(), check_vma=False,
+            )(x)
+
+        def ppm(x):
+            perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+            return jax.shard_map(
+                lambda v: jax.lax.ppermute(v, "x", perm), mesh=mesh,
+                in_specs=P("x"), out_specs=P("x"), check_vma=False,
+            )(x)
+
+        for s in sizes:
+            per_dev = max(s // nb // ndev, 1)
+            run("all-reduce", ar, per_dev)
+            run("all-gather", ag, per_dev)
+            run("collective-permute", ppm, per_dev)
+        return count
+
+    def profile_all(self) -> int:
+        n = 0
+        n += self.profile_matmul()
+        n += self.profile_elementwise()
+        n += self.profile_reduction()
+        n += self.profile_memory_ops()
+        n += self.profile_collectives()
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Host calibration
+# ---------------------------------------------------------------------------
+
+
+def calibrate_host(db: ProfileDB, platform: str = "cpu_host") -> PlatformSpec:
+    """Fit (peak_flops, mem_bw, dispatch overhead) from profiled points and
+    store them in the DB meta; returns a PlatformSpec for the estimator."""
+    meta = db.meta(platform)
+    dots = db.entries(platform, "dot")
+    peak = 0.0
+    for e in dots:
+        if e.mean_s > 0:
+            peak = max(peak, e.flops / e.mean_s)
+    bw = 0.0
+    for fam in ("add", "mul", "relu"):
+        for e in db.entries(platform, fam):
+            if e.mean_s > 0:
+                bw = max(bw, e.bytes / e.mean_s)
+    overhead = 0.0
+    times = [
+        e.mean_s
+        for fam in db.op_families(platform)
+        for e in db.entries(platform, fam)
+    ]
+    if times:
+        overhead = float(np.percentile(np.asarray(times), 5))
+    meta["peak_flops"] = peak or CPU_HOST.chip.peak_flops
+    meta["mem_bw"] = bw or CPU_HOST.chip.hbm_bw
+    meta["dispatch_s"] = overhead
+    # link bandwidth from collective profiles (ring-model inversion)
+    link_bw = 0.0
+    for e in db.entries(platform, "all-reduce"):
+        g = int(e.args.get("devices", 2))
+        if e.mean_s > 0 and g > 1:
+            wire = 2.0 * (g - 1) / g * e.bytes
+            link_bw = max(link_bw, wire / e.mean_s)
+    meta["link_bw"] = link_bw or CPU_HOST.ici.bw
+    return PlatformSpec(
+        name=platform,
+        chip=ChipSpec(
+            name=platform,
+            peak_flops=meta["peak_flops"],
+            hbm_bw=meta["mem_bw"],
+            gemm_efficiency=1.0,
+            vector_efficiency=1.0,
+        ),
+        ici=LinkSpec("shm", meta["link_bw"], latency=meta["dispatch_s"]),
+        dcn=LinkSpec("shm", meta["link_bw"], latency=meta["dispatch_s"]),
+    )

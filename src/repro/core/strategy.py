@@ -1,0 +1,166 @@
+"""Training-strategy config + synthetic schedule graphs for the simulator.
+
+The paper: "[the simulation module] also needs additional information about
+the training strategy from a config file, such as the number of replicas in
+data parallelism, and the pipelining setting for model parallelism which may
+not be available in the dataflow graph."
+
+:class:`Strategy` is that config.  :func:`pipeline_graph` materializes a
+pipeline-parallel training step (GPipe or 1F1B) as a DataflowGraph with
+per-stage device placements — the heterogeneous-placement case of the
+simulator, and the substrate the autotuner searches over.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.graph import DataflowGraph
+
+
+@dataclass(frozen=True)
+class Strategy:
+    dp: int = 1                 # data-parallel replicas
+    tp: int = 1                 # tensor-parallel width
+    pp: int = 1                 # pipeline stages
+    ep: int = 1                 # expert-parallel width
+    microbatches: int = 1
+    schedule: str = "1f1b"      # "gpipe" | "1f1b"
+    remat: str = "dots"
+    zero1: bool = False
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    def describe(self) -> str:
+        return (
+            f"dp{self.dp}xtp{self.tp}xpp{self.pp}"
+            f"(ep{self.ep},mb{self.microbatches},{self.schedule})"
+        )
+
+
+@dataclass(frozen=True)
+class LayerCost:
+    """Per-layer per-microbatch cost profile (per tp-shard)."""
+
+    fwd_flops: float
+    fwd_bytes: float
+    bwd_multiplier: float = 2.0
+    # bytes crossing a stage boundary per microbatch (activations fwd,
+    # gradients bwd)
+    boundary_bytes: float = 0.0
+    # gradient all-reduce payload per stage (dp > 1)
+    grad_bytes: float = 0.0
+
+
+class GraphBuilder:
+    """Name-keyed DAG builder: add in any order, emits topologically."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.specs: dict[str, dict] = {}
+
+    def add(self, name: str, kind: str, deps: list[str], **kw):
+        assert name not in self.specs, f"duplicate node {name}"
+        self.specs[name] = dict(kind=kind, deps=deps, kw=kw)
+
+    def build(self) -> DataflowGraph:
+        indeg = {n: 0 for n in self.specs}
+        succ: dict[str, list[str]] = {n: [] for n in self.specs}
+        for n, s in self.specs.items():
+            for d in s["deps"]:
+                if d not in self.specs:
+                    raise KeyError(f"node {n} depends on unknown {d}")
+                indeg[n] += 1
+                succ[d].append(n)
+        queue = deque(sorted(n for n, d in indeg.items() if d == 0))
+        g = DataflowGraph(self.name)
+        uid: dict[str, int] = {}
+        while queue:
+            n = queue.popleft()
+            s = self.specs[n]
+            node = g.add(n, s["kind"], deps=[uid[d] for d in s["deps"]], **s["kw"])
+            uid[n] = node.uid
+            for m in succ[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    queue.append(m)
+        if len(uid) != len(self.specs):
+            missing = set(self.specs) - set(uid)
+            raise ValueError(f"cycle through {sorted(missing)[:5]}")
+        g.validate()
+        return g
+
+
+def pipeline_graph(
+    n_layers: int,
+    cost: LayerCost,
+    strategy: Strategy,
+) -> DataflowGraph:
+    """Build the fwd/bwd microbatch DAG for a pipeline-parallel step.
+
+    Nodes: F(s,m) and B(s,m) on device "stage{s}"; stage-boundary sends on
+    "link:pp"; the closing gradient all-reduce per stage on "link:dp{s}".
+    Dependencies encode the schedule:
+      * GPipe: B(s,m) additionally depends on F(s, M-1) (full flush).
+      * 1F1B:  F(s,m) depends on B(s, m - (S - s)) — at most (S - s)
+        microbatches in flight per stage (the classic memory window).
+    """
+    S, M = strategy.pp, strategy.microbatches
+    assert n_layers % S == 0, f"layers {n_layers} % stages {S} != 0"
+    per_stage = n_layers // S
+    b = GraphBuilder(f"pipeline_{strategy.describe()}")
+
+    fwd_flops = cost.fwd_flops * per_stage
+    fwd_bytes = cost.fwd_bytes * per_stage
+    bwd_flops = fwd_flops * cost.bwd_multiplier
+    bwd_bytes = fwd_bytes * cost.bwd_multiplier
+
+    for m in range(M):
+        for s in range(S):
+            deps = []
+            if s > 0:
+                deps.append(f"sendF{s-1}.{m}")
+            if strategy.schedule == "1f1b":
+                prev = m - (S - s)
+                if prev >= 0:
+                    deps.append(f"B{s}.{prev}")
+            b.add(
+                f"F{s}.{m}", "fwd", deps,
+                flops=fwd_flops, in_bytes=fwd_bytes,
+                device=f"stage{s}",
+            )
+            if s < S - 1:
+                b.add(
+                    f"sendF{s}.{m}", "collective-permute", [f"F{s}.{m}"],
+                    comm_bytes=cost.boundary_bytes, group_size=2,
+                    link_kind="ici", device="link:pp",
+                )
+    for m in range(M):
+        for s in reversed(range(S)):
+            deps = [f"F{s}.{m}"]
+            if s < S - 1:
+                deps.append(f"sendB{s+1}.{m}")
+            if strategy.schedule == "gpipe":
+                deps.append(f"F{s}.{M-1}")
+            b.add(
+                f"B{s}.{m}", "bwd", deps,
+                flops=bwd_flops, in_bytes=bwd_bytes,
+                device=f"stage{s}",
+            )
+            if s > 0:
+                b.add(
+                    f"sendB{s}.{m}", "collective-permute", [f"B{s}.{m}"],
+                    comm_bytes=cost.boundary_bytes, group_size=2,
+                    link_kind="ici", device="link:pp",
+                )
+    if strategy.dp > 1 and cost.grad_bytes > 0:
+        for s in range(S):
+            b.add(
+                f"gradAR{s}", "all-reduce",
+                [f"B{s}.{m}" for m in range(M)],
+                comm_bytes=cost.grad_bytes, group_size=strategy.dp,
+                link_kind="ici", device=f"link:dp{s}",
+            )
+    return b.build()

@@ -1,0 +1,39 @@
+"""Chrome-trace export of simulated timelines (viewable in perfetto/chrome)."""
+from __future__ import annotations
+
+import json
+
+from repro.core.simulator import SimResult
+
+
+def to_chrome_trace(result: SimResult, path: str | None = None) -> dict:
+    devices = sorted({e.device for e in result.events})
+    tid = {d: i for i, d in enumerate(devices)}
+    events = []
+    for e in result.events:
+        events.append(
+            {
+                "name": e.name,
+                "cat": e.kind,
+                "ph": "X",
+                "ts": e.start * 1e6,
+                "dur": (e.end - e.start) * 1e6,
+                "pid": 0,
+                "tid": tid[e.device],
+            }
+        )
+    for d, t in tid.items():
+        events.append(
+            {
+                "name": "thread_name",
+                "ph": "M",
+                "pid": 0,
+                "tid": t,
+                "args": {"name": d},
+            }
+        )
+    trace = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if path:
+        with open(path, "w") as f:
+            json.dump(trace, f)
+    return trace

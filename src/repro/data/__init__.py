@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTokens, Prefetcher, make_train_iterator  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.ft.elastic import RemeshPlan, apply_remesh, plan_remesh  # noqa: F401
+from repro.ft.heartbeat import HeartbeatMonitor  # noqa: F401
+from repro.ft.straggler import StragglerPolicy, StepTimeMonitor  # noqa: F401

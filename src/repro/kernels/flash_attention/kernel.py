@@ -1,0 +1,146 @@
+"""Flash-attention forward kernel (Pallas TPU).
+
+TPU adaptation of the FlashAttention tiling (arXiv:2205.14135): the online-
+softmax accumulator lives in VMEM scratch; the grid is
+
+    (batch*q_heads, Sq / BLOCK_Q, Skv / BLOCK_K)
+
+with the KV dimension innermost.  TPU grids execute the trailing dimension
+sequentially on one core, so scratch (m, l, acc) persists across the KV
+sweep of one (head, q-block) — the idiomatic TPU replacement for a CUDA
+thread-block loop.  The output block is written on the last KV step.
+
+Block shapes are MXU-aligned ((128, head_dim) tiles, head_dim in {64, 128});
+per-program VMEM = q(BQ x D) + k,v(BK x D) + acc(BQ x D) + scores(BQ x BK)
+in fp32 ~= 0.5 MB at the defaults — comfortably under the ~1 MB/program
+budget that keeps double buffering effective on v5e.
+
+GQA is native: the kv BlockSpec index map folds the q-head -> kv-head
+mapping, so each kv head is streamed once per group, not repeated H/K times
+through HBM (the XLA-side `repeat_kv` baseline pays that traffic; see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, sm_scale: float, causal: bool, block_q: int, block_k: int,
+    kv_blocks: int, kv_valid: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)          # (BK, D)
+    v = v_ref[0].astype(jnp.float32)          # (BK, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                              # (BQ, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < kv_valid
+    if causal:
+        mask = jnp.logical_and(mask, k_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    # fully-masked rows: m_new == NEG_INF -> p == exp(0) == 1; zero them
+    p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+    corr = jnp.where(m_prev > NEG_INF / 2, corr, 0.0)
+
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _emit():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q, k, v, *, causal: bool = True, sm_scale: float | None = None,
+    block_q: int = 128, block_k: int = 128, kv_valid: int | None = None,
+    interpret: bool = False,
+):
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D), H % K == 0. -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    kv_valid = skv if kv_valid is None else kv_valid
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    qh = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kh_ = jnp.moveaxis(k, 2, 1).reshape(b * kh, skv, d)
+    vh = jnp.moveaxis(v, 2, 1).reshape(b * kh, skv, d)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh_ = jnp.pad(kh_, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+        kv_valid = min(kv_valid, skv)
+    sqp, skvp = sq + pad_q, skv + pad_k
+    q_blocks, kv_blocks = sqp // block_q, skvp // block_k
+
+    def kv_head(bh):
+        # program bh covers (batch bh // h, q-head bh % h) -> kv row index
+        return (bh // h) * kh + (bh % h) // group
+
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        sm_scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k,
+        kv_blocks=kv_blocks, kv_valid=kv_valid,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (kv_head(bh), ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (kv_head(bh), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qh, kh_, vh)
+    out = out[:, :sq].reshape(b, h, sq, d)
+    return jnp.moveaxis(out, 1, 2)

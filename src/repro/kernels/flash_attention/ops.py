@@ -1,0 +1,60 @@
+"""Public flash-attention op: jit'd wrapper with custom VJP.
+
+Forward runs the Pallas kernel (interpret=True automatically on CPU
+backends, where it executes the kernel body op-by-op for validation).  The
+backward pass recomputes attention with the jnp reference — the standard
+"flash forward, recompute backward" memory profile without a second
+hand-written kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _flash(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def _fwd(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    out = _flash(q, k, v, causal, sm_scale, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, sm_scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal, sm_scale=sm_scale),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, sm_scale: float | None = None,
+    block_q: int = 128, block_k: int = 128, interpret: bool | None = None,
+):
+    """Flash attention with native GQA.  q: (B,Sq,H,D); k,v: (B,Skv,K,D)."""
+    return _flash(
+        q, k, v, causal, sm_scale, block_q, block_k, _auto_interpret(interpret)
+    )

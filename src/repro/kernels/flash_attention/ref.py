@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (causal/bidirectional, GQA)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D) with H % K == 0.
+
+    Returns (B, Sq, H, D).  fp32 softmax, output in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    if kheads != h:
+        reps = h // kheads
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool), k.shape[1] - sq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Public fused-RMSNorm op (any leading batch dims; ref-backed VJP)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import fused_rmsnorm_2d
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x, w, eps, interpret):
+    shape = x.shape
+    y = fused_rmsnorm_2d(
+        x.reshape(-1, shape[-1]), w, eps=eps, interpret=interpret
+    )
+    return y.reshape(shape)
+
+
+def _fwd(x, w, eps, interpret):
+    return _rmsnorm(x, w, eps, interpret), (x, w)
+
+
+def _bwd(eps, interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: rmsnorm_ref(x_, w_, eps), x, w)
+    return vjp(g)
+
+
+_rmsnorm.defvjp(_fwd, _bwd)
+
+
+def fused_rmsnorm(x, w, *, eps: float = 1e-5, interpret: bool | None = None):
+    return _rmsnorm(x, w, eps, _auto_interpret(interpret))

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """x: (..., D); w: (D,). fp32 statistics, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

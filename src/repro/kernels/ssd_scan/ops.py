@@ -1,0 +1,41 @@
+"""Public SSD-scan op (ref-backed VJP, auto-interpret on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, B, C, dt, A, chunk, interpret):
+    return ssd_scan_pallas(x, B, C, dt, A, chunk, interpret=interpret)
+
+
+def _fwd(x, B, C, dt, A, chunk, interpret):
+    return _ssd(x, B, C, dt, A, chunk, interpret), (x, B, C, dt, A)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, B, C, dt, A = res
+    _, vjp = jax.vjp(
+        lambda x_, B_, C_, dt_, A_: ssd_scan_ref(x_, B_, C_, dt_, A_, chunk),
+        x, B, C, dt, A,
+    )
+    return vjp(g)
+
+
+_ssd.defvjp(_fwd, _bwd)
+
+
+def ssd_scan(x, B, C, dt, A, *, chunk: int = 128, interpret: bool | None = None):
+    """Chunked SSD scan. Shapes as in ref.py; returns (y, final_state)."""
+    return _ssd(x, B, C, dt, A, chunk, _auto_interpret(interpret))

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan.
+
+Mirrors repro.models.mamba.ssd_chunked but self-contained (the kernel tests
+must not depend on model code paths).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, B, C, dt, A, chunk: int):
+    """x: (b,S,h,p); B,C: (b,S,h,n); dt: (b,S,h) >=0; A: (h,) < 0.
+
+    Returns (y: (b,S,h,p), final_state: (b,h,n,p)) in fp32.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc, Q = s // chunk, chunk
+    r = lambda t: t.reshape((b, nc, Q) + t.shape[2:])
+    xc, Bc, Cc, dtc = r(x.astype(jnp.float32)), r(B.astype(jnp.float32)), r(
+        C.astype(jnp.float32)
+    ), r(dt.astype(jnp.float32))
+    dA = dtc * A
+    cum = jnp.cumsum(dA, axis=2)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcqhn,bcthn->bcqth", Cc, Bc) * L
+    xdt = xc * dtc[..., None]
+    y_intra = jnp.einsum("bcqth,bcthp->bcqhp", scores, xdt)
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    chunk_states = jnp.einsum("bcthn,bcthp->bchnp", Bc * w_end[..., None], xdt)
+    total = jnp.exp(cum[:, :, -1, :])
+
+    def step(st, inp):
+        cs, tot = inp
+        out = st
+        return st * tot[:, :, None, None] + cs, out
+
+    final, st_in = jax.lax.scan(
+        step,
+        jnp.zeros((b, h, n, p), jnp.float32),
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    st_in = jnp.moveaxis(st_in, 0, 1)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cc * jnp.exp(cum)[..., None], st_in)
+    return (y_intra + y_inter).reshape(b, s, h, p), final

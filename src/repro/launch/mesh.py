@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else must see the real (single) device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_info(mesh):
+    """MeshInfo for the HLO parser's collective classification."""
+    from repro.core.hlo_parser import MeshInfo
+
+    return MeshInfo(
+        axis_names=tuple(mesh.axis_names),
+        axis_sizes=tuple(mesh.devices.shape),
+        dcn_axes=("pod",) if "pod" in mesh.axis_names else (),
+    )

@@ -1,0 +1,172 @@
+"""End-to-end training driver.
+
+Wires together every substrate layer: config -> model -> sharding -> data
+pipeline -> train step -> checkpoint/restart -> telemetry (heartbeat, step
+times, straggler policy).  On the CPU container it runs reduced configs for
+real (examples/train_small_lm.py trains a ~100M model a few hundred steps);
+on a TPU fleet the same driver runs the full configs over the production
+mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50 --seq 256 --batch 8 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, restore
+from repro.configs.base import ShapeConfig, get_config, smoke_variant
+from repro.data import make_train_iterator
+from repro.ft import HeartbeatMonitor, StepTimeMonitor, StragglerPolicy
+from repro.models import build_model
+from repro.models.sharding import make_ctx, tree_shardings, use_sharding
+from repro.optim import cosine_with_warmup, make_optimizer
+from repro.train import make_train_step
+from repro.train.step import TrainState, init_state
+
+
+def build_mesh():
+    n = jax.device_count()
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def train(
+    cfg,
+    *,
+    steps: int,
+    seq: int,
+    batch: int,
+    ckpt_dir: str | None = None,
+    restore_from: bool = True,
+    lr: float = 3e-4,
+    warmup: int = 20,
+    grad_accum: int = 1,
+    log_every: int = 10,
+    ckpt_every: int = 50,
+    host_id: int = 0,
+    num_hosts: int = 1,
+    seed: int = 0,
+    log_fn=print,
+):
+    shape = ShapeConfig("train_driver", seq, batch, "train")
+    mesh = build_mesh()
+    ctx = make_ctx(mesh, overrides=cfg.sharding_overrides)
+    model = build_model(cfg)
+    opt = make_optimizer(cfg.optimizer)
+    sched = cosine_with_warmup(lr, warmup, max(steps, warmup + 1))
+    step_fn = make_train_step(model, opt, sched, grad_accum=grad_accum)
+
+    with use_sharding(ctx):
+        state, axes = init_state(model, jax.random.PRNGKey(seed), opt)
+        start_step = 0
+        ckpt = None
+        if ckpt_dir:
+            ckpt = AsyncCheckpointer(ckpt_dir)
+            if restore_from:
+                out = restore(state, ckpt_dir)
+                if out is not None:
+                    state, start_step = out
+                    state = jax.tree_util.tree_map(jnp.asarray, state)
+                    log_fn(f"[restore] resumed from step {start_step}")
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+        data = make_train_iterator(
+            cfg, shape, num_hosts=num_hosts, host_id=host_id,
+            seed=seed, start_step=start_step,
+        )
+        hb = HeartbeatMonitor(
+            os.path.join(ckpt_dir, "hb") if ckpt_dir else "/tmp/repro_hb",
+            num_hosts=num_hosts,
+        )
+        mon = StepTimeMonitor()
+        pol = StragglerPolicy()
+
+        losses = []
+        t_train0 = time.perf_counter()
+        for i in range(start_step, steps):
+            host_batch = next(data)
+            dev_batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+            t0 = time.perf_counter()
+            state, metrics = jitted(state, dev_batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            mon.record(host_id, dt)
+            hb.beat(host_id, i)
+            losses.append(loss)
+            if (i + 1) % log_every == 0 or i == start_step:
+                tok_s = batch * seq / dt
+                log_fn(
+                    f"[step {i + 1:5d}] loss={loss:.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.3f} "
+                    f"lr={float(metrics['lr']):.2e} "
+                    f"{dt * 1e3:.0f}ms {tok_s:,.0f} tok/s"
+                )
+            if ckpt and (i + 1) % ckpt_every == 0:
+                ckpt.save(state, i + 1)
+            verdicts = pol.assess(mon)
+            if verdicts.get(host_id) == "evict":  # pragma: no cover
+                log_fn(f"[straggler] host {host_id} flagged for eviction")
+        data.close()
+        if ckpt:
+            ckpt.save(state, steps)
+            ckpt.wait()
+        wall = time.perf_counter() - t_train0
+        log_fn(
+            f"[done] {steps - start_step} steps in {wall:.1f}s; "
+            f"loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+        )
+        return state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--no-restore", action="store_true")
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override d_model (with --smoke)")
+    ap.add_argument("--layers", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if args.d_model:
+        cfg = dataclasses.replace(
+            cfg, d_model=args.d_model,
+            head_dim=args.d_model // cfg.num_heads,
+        )
+    if args.layers:
+        cfg = dataclasses.replace(cfg, num_layers=args.layers)
+    train(
+        cfg,
+        steps=args.steps,
+        seq=args.seq,
+        batch=args.batch,
+        lr=args.lr,
+        grad_accum=args.grad_accum,
+        ckpt_dir=args.ckpt_dir,
+        restore_from=not args.no_restore,
+    )
+
+
+if __name__ == "__main__":
+    main()

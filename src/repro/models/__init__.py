@@ -1,0 +1,7 @@
+from repro.models.build import (  # noqa: F401
+    Model,
+    batch_logical_axes,
+    build_model,
+    input_specs,
+    make_concrete_batch,
+)

@@ -1,0 +1,170 @@
+"""Model facade: one uniform API over all architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are plain
+functions suitable for ``jax.jit`` / ``.lower()``:
+
+    params, axes = model.init(rng)              (or abstract_params())
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode(params, cache, token, cache_len)
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) cell — the dry-run lowers against these, so
+no real data or parameters are ever allocated.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable  # rng -> (params, axes)
+    loss: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, batch) -> (logits, cache)
+    decode: Callable  # (params, cache, token, cache_len) -> (logits, cache)
+    init_cache: Callable  # (batch, max_len, dtype) -> cache
+    cache_axes: Callable  # () -> logical-axes tree matching init_cache
+
+    def abstract_params(self, seed: int = 0):
+        """(ShapeDtypeStruct params, axes) without allocating anything."""
+        box = {}
+
+        def only_params(rng):
+            p, a = self.init(rng)
+            box["axes"] = a
+            return p
+
+        shapes = jax.eval_shape(only_params, jax.random.PRNGKey(seed))
+        return shapes, box["axes"]
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, max_len, dtype=dtype)
+        )
+
+
+def _module_for(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family in ("hybrid", "ssm"):
+        return hybrid
+    if cfg.family == "audio":
+        return encdec
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    mod = _module_for(cfg)
+
+    def init(rng):
+        return mod.init_params(rng, cfg)
+
+    def loss(params, batch):
+        return mod.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch, max_len=None):
+        if max_len is None:
+            max_len = _prefill_total_len(cfg, batch)
+        return mod.prefill(params, batch, cfg, max_len)
+
+    def decode(params, cache, token, cache_len):
+        return mod.decode_step(params, cache, token, cache_len, cfg)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return mod.init_cache(batch, max_len, cfg, dtype)
+
+    def cache_axes():
+        return mod.cache_axes(cfg)
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        loss=loss,
+        prefill=prefill,
+        decode=decode,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+    )
+
+
+def _prefill_total_len(cfg: ArchConfig, batch) -> int:
+    s = batch["tokens"].shape[1]
+    if cfg.num_patches:
+        s += cfg.num_patches
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs) per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract inputs for the step function of this cell.
+
+    train/prefill: the token batch (plus stub modality inputs).
+    decode: the new token; the KV/SSM cache is produced by ``cache_specs``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        text_len = S - cfg.num_patches if cfg.num_patches else S
+        assert text_len > 0
+        specs: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, text_len), i32)
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, text_len), i32)
+        if cfg.num_patches:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.vision_dim), jnp.bfloat16
+            )
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.frontend_dim), jnp.bfloat16
+            )
+        return specs
+    # decode: one new token against a cache of S tokens
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def batch_logical_axes(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, tuple]:
+    """Logical axes for each entry of input_specs (for in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        axes: dict[str, tuple] = {"tokens": ("batch", None)}
+        if shape.kind == "train":
+            axes["labels"] = ("batch", None)
+        if cfg.num_patches:
+            axes["patches"] = ("batch", None, None)
+        if cfg.family == "audio":
+            axes["frames"] = ("batch", None, None)
+        return axes
+    return {"token": ("batch", None)}
+
+
+def make_concrete_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0):
+    """Real (host) arrays matching input_specs — for smoke tests/benchmarks."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, sds in input_specs(cfg, shape).items():
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=sds.shape, dtype=np.int32)
+            )
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(sds.shape, dtype=np.float32), dtype=sds.dtype
+            )
+    return out

@@ -1,0 +1,155 @@
+"""Mixture-of-experts FFN: grouped GShard-style capacity dispatch.
+
+Design notes (see DESIGN.md §5):
+
+* Tokens are dispatched within fixed-size *groups* so the dispatch mask is
+  ``(groups, group, E, C)`` with ``C = ceil(top_k * group / E * cf)`` — linear
+  in tokens, never ``O(N * E)`` dense compute.
+* The expert axis is sharded over the ``model`` mesh axis (expert
+  parallelism); groups follow the batch over ``data``.  The combine einsum
+  contracts the sharded expert axis, so XLA materializes the MoE combine as a
+  ``model``-axis all-reduce — this is the baseline collective pattern the
+  §Perf hillclimb iterates on (reduce-scatter decomposition / all-to-all
+  shard_map variant in ``repro.dist.ep_a2a``).
+* Everything is differentiable (one-hot dispatch; no sorts), so the same code
+  path serves train and serve lowering.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import _init_dense
+from repro.models.sharding import shard_hint
+
+
+def init_moe(key, d_model: int, moe: MoEConfig, dtype):
+    ks = jax.random.split(key, 4)
+    E, F = moe.num_experts, moe.d_ff_expert
+    params = {
+        "router": _init_dense(ks[0], (d_model, E), d_model, jnp.float32),
+        "wg": _init_dense(ks[1], (E, d_model, F), d_model, dtype),
+        "wu": _init_dense(ks[2], (E, d_model, F), d_model, dtype),
+        "wd": _init_dense(ks[3], (E, F, d_model), F, dtype),
+    }
+    # expert weights get their own logical axes so §Perf rule overrides can
+    # re-shard them without touching global "embed"/"ffn" activations
+    if moe.impl == "ep_a2a":
+        # explicit EP layout: experts over data, ffn width over model
+        axes = {
+            "router": ("embed", None),
+            "wg": ("experts_ep", "expert_embed", "expert_ffn_ep"),
+            "wu": ("experts_ep", "expert_embed", "expert_ffn_ep"),
+            "wd": ("experts_ep", "expert_ffn_ep", "expert_embed"),
+        }
+    else:
+        axes = {
+            "router": ("embed", "experts"),
+            "wg": ("experts", "expert_embed", "expert_ffn"),
+            "wu": ("experts", "expert_embed", "expert_ffn"),
+            "wd": ("experts", "expert_ffn", "expert_embed"),
+        }
+    return params, axes
+
+
+def capacity(moe: MoEConfig, group: int) -> int:
+    return max(
+        1, int(math.ceil(moe.top_k * group / moe.num_experts * moe.capacity_factor))
+    )
+
+
+def moe_ffn(p, x, moe: MoEConfig, compute_dtype):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Internally reshapes tokens to (n_groups, group, D).  B*S must be divisible
+    by the effective group size (enforced by choosing group_size; falls back
+    to one group of all tokens when B*S < group_size).
+    """
+    cdt = jnp.dtype(compute_dtype)
+    if moe.impl == "ep_a2a":
+        from repro.models.sharding import current_ctx
+
+        ctx = current_ctx()
+        if ctx is not None and "data" in ctx.mesh.axis_names:
+            from repro.dist.ep_a2a import moe_ffn_ep_a2a
+
+            return moe_ffn_ep_a2a(p, x, moe, compute_dtype, ctx.mesh)
+        # no mesh context (single-device smoke tests): einsum math below is
+        # numerically identical at capacity parity
+    B, S, D = x.shape
+    n_tok = B * S
+    group = min(moe.group_size, n_tok)
+    if n_tok % group != 0:
+        group = n_tok  # odd shapes (single-token decode, tests): one group
+    g = n_tok // group
+    E, k = moe.num_experts, moe.top_k
+    C = capacity(moe, group)
+
+    xg = x.reshape(g, group, D)
+    xg = shard_hint(xg, ("group", None, "embed"), "moe_x")
+
+    # -- routing (fp32) ------------------------------------------------------
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (g, s, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (g, s, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # -- capacity assignment --------------------------------------------------
+    # one-hot over experts for each of the k choices: (g, s, k, E)
+    oh_e = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    # position of each (token, choice) within its expert, counted in
+    # (token-major, choice-minor) order across the group: (g, s*k, E)
+    oh_flat = oh_e.reshape(g, group * k, E)
+    pos = jnp.cumsum(oh_flat, axis=1) - oh_flat  # zero-based
+    pos = pos.reshape(g, group, k, E)
+    pos_tok = jnp.sum(pos * oh_e, axis=-1)  # (g, s, k) position in chosen expert
+    keep = pos_tok < C
+    oh_c = jax.nn.one_hot(
+        jnp.where(keep, pos_tok, C).astype(jnp.int32), C, dtype=jnp.float32
+    )  # (g, s, k, C); dropped tokens one-hot to nothing (index C clipped out)
+
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)  # (g, s, E, C) in {0,1}
+    combine = jnp.einsum(
+        "gske,gskc,gsk->gsec", oh_e, oh_c, gate_vals
+    )  # (g, s, E, C)
+    dispatch = shard_hint(
+        dispatch.astype(cdt), ("group", None, "act_experts", None), "moe_dispatch"
+    )
+
+    # -- expert compute -------------------------------------------------------
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(cdt))
+    # expert_group is a separate logical axis from "group" so a rules
+    # override can gather TOKENS to the expert shards (activation movement)
+    # without replicating the much larger pre-dispatch token tensor
+    expert_in = shard_hint(
+        expert_in,
+        ("act_experts", "expert_group", None, "act_expert_embed"),
+        "moe_in",
+    )
+    gph = jnp.einsum("egcd,edf->egcf", expert_in, p["wg"].astype(cdt))
+    uph = jnp.einsum("egcd,edf->egcf", expert_in, p["wu"].astype(cdt))
+    h = jax.nn.silu(gph) * uph
+    h = shard_hint(h, ("act_experts", "expert_group", None, "act_expert_ffn"), "moe_h")
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["wd"].astype(cdt))
+    expert_out = shard_hint(
+        expert_out,
+        ("act_experts", "expert_group", None, "act_expert_embed"),
+        "moe_out",
+    )
+
+    # -- combine (contracts the model-sharded expert axis -> all-reduce) ------
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(cdt), expert_out)
+    y = y.reshape(B, S, D)
+
+    # -- load-balance auxiliary loss (Switch/GShard) ---------------------------
+    # fraction of tokens routed to each expert (counting top-1 choice) x mean
+    # router probability per expert.
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(oh_e[:, :, 0, :], axis=(0, 1))  # (E,)
+    aux = moe.router_aux_loss * E * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,268 @@
+"""Decoder-only transformer stack (dense / moe / vlm families).
+
+The layer stack is a ``lax.scan`` over parameters stacked on a leading
+``layers`` dim (initialized with ``jax.vmap``), so HLO size and compile time
+are depth-independent — essential for dry-running 80-layer models on a CPU
+host.  Remat policy wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.sharding import shard_hint
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _is_moe_layer(cfg: ArchConfig, idx: int) -> bool:
+    return cfg.moe is not None and idx % cfg.moe.every_k == cfg.moe.offset
+
+
+def init_block(key, cfg: ArchConfig):
+    """One decoder block: attention + FFN (dense or MoE [+ shared expert])."""
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    attn_p, attn_a = L.init_attention(ks[0], cfg)
+    n1, n1a = L.init_rmsnorm(cfg.d_model, dt)
+    n2, n2a = L.init_rmsnorm(cfg.d_model, dt)
+    params = {"attn": attn_p, "norm1": n1, "norm2": n2}
+    axes = {"attn": attn_a, "norm1": n1a, "norm2": n2a}
+    if cfg.moe is not None and cfg.moe.every_k == 1:
+        moe_p, moe_a = M.init_moe(ks[1], cfg.d_model, cfg.moe, dt)
+        params["moe"] = moe_p
+        axes["moe"] = moe_a
+        if cfg.moe.num_shared_experts:
+            sh_p, sh_a = L.init_mlp(
+                ks[2], cfg.d_model, cfg.moe.num_shared_experts * cfg.d_ff, dt
+            )
+            params["shared_mlp"] = sh_p
+            axes["shared_mlp"] = sh_a
+    else:
+        mlp_p, mlp_a = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dt)
+        params["mlp"] = mlp_p
+        axes["mlp"] = mlp_a
+    return params, axes
+
+
+def _prefix_layers(axes):
+    """Prepend the scan 'layers' axis to every logical-axes tuple."""
+    return jax.tree_util.tree_map(
+        lambda a: ("layers",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x
+        ),
+    )
+
+
+def init_params(key, cfg: ArchConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head, k_proj = jax.random.split(key, 4)
+    emb, emb_a = L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dt)
+    block_axes_box = {}
+
+    def one_block(k):
+        p, a = init_block(k, cfg)
+        block_axes_box["axes"] = a
+        return p
+
+    blocks = jax.vmap(one_block)(jax.random.split(k_blocks, cfg.num_layers))
+    fn, fn_a = L.init_rmsnorm(cfg.d_model, dt)
+    params = {"embed": emb, "blocks": blocks, "final_norm": fn}
+    axes = {
+        "embed": emb_a,
+        "blocks": _prefix_layers(block_axes_box["axes"]),
+        "final_norm": fn_a,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L._init_dense(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model, dt
+        )
+        axes["head"] = ("embed", "vocab")
+    if cfg.num_patches:  # vlm multimodal projector
+        kp1, kp2 = jax.random.split(k_proj)
+        params["projector"] = {
+            "w1": L._init_dense(kp1, (cfg.vision_dim, cfg.d_model), cfg.vision_dim, dt),
+            "w2": L._init_dense(kp2, (cfg.d_model, cfg.d_model), cfg.d_model, dt),
+        }
+        axes["projector"] = {
+            "w1": ("frontend", "embed"),
+            "w2": ("embed", "embed"),
+        }
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def apply_block(p, x, cfg: ArchConfig, *, positions, mask=None):
+    cdt = cfg.compute_dtype
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps, cdt)
+    x = x + L.attention(p["attn"], h, cfg, positions=positions, mask=mask)
+    h = L.rmsnorm(x, p["norm2"], cfg.norm_eps, cdt)
+    aux = 0.0
+    if "moe" in p:
+        y, aux = M.moe_ffn(p["moe"], h, cfg.moe, cdt)
+        if "shared_mlp" in p:
+            y = y + L.mlp(p["shared_mlp"], h, cdt)
+        x = x + y
+    else:
+        x = x + L.mlp(p["mlp"], h, cdt)
+    return shard_hint(x, ("batch", "seq", "embed"), "block_out"), aux
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def run_stack(params, x, cfg: ArchConfig, *, positions, mask=None):
+    """Scan the block stack. Returns (hidden, aux_loss_sum)."""
+
+    def body(carry, block_p):
+        h, aux = carry
+        h, a = apply_block(block_p, h, cfg, positions=positions, mask=mask)
+        return (h, aux + a), None
+
+    body = _remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["blocks"])
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss front-ends (shared with vlm)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Returns (h, positions, text_start).  For vlm, prepends projected
+    patch embeddings; text occupies positions [num_patches, num_patches+S)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = L.embed(params["embed"], batch["tokens"], cdt)
+    b = h.shape[0]
+    if cfg.num_patches:
+        pr = params["projector"]
+        pe = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(cdt), pr["w1"].astype(cdt))
+        pe = jax.nn.gelu(pe)
+        pe = jnp.einsum("bpd,de->bpe", pe, pr["w2"].astype(cdt))
+        h = jnp.concatenate([pe, h], axis=1)
+    h = shard_hint(h, ("batch", "seq", "embed"), "embed_out")
+    s = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return h, positions, cfg.num_patches
+
+
+def _head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"], True
+    return params["head"], False
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    h, positions, text_start = _embed_inputs(params, batch, cfg)
+    h, aux = run_stack(params, h, cfg, positions=positions)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps, cfg.compute_dtype)
+    if text_start:
+        h = h[:, text_start:]
+    w, transpose = _head_weight(params, cfg)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    ce = L.chunked_xent(
+        h, w, labels, transpose=transpose, chunk=cfg.loss_chunk, mask=mask
+    )
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, max_len: int, cfg: ArchConfig, dtype):
+    one = L.init_kv_cache(batch, max_len, cfg, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one
+    )
+
+
+def cache_axes(cfg: ArchConfig):
+    return _prefix_layers(L.kv_cache_axes(cfg))
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int):
+    """Forward pass writing the KV cache; returns (last-token logits, cache)."""
+    h, positions, _ = _embed_inputs(params, batch, cfg)
+    cache = init_cache(h.shape[0], max_len, cfg, jnp.dtype(cfg.compute_dtype))
+
+    def body(carry, xs):
+        hh = carry
+        block_p, layer_cache = xs
+        n = L.rmsnorm(hh, block_p["norm1"], cfg.norm_eps, cfg.compute_dtype)
+        a, new_cache = L.attention_prefill(
+            block_p["attn"], n, cfg, positions=positions, cache=layer_cache
+        )
+        hh = hh + a
+        n = L.rmsnorm(hh, block_p["norm2"], cfg.norm_eps, cfg.compute_dtype)
+        if "moe" in block_p:
+            y, _ = M.moe_ffn(block_p["moe"], n, cfg.moe, cfg.compute_dtype)
+            if "shared_mlp" in block_p:
+                y = y + L.mlp(block_p["shared_mlp"], n, cfg.compute_dtype)
+            hh = hh + y
+        else:
+            hh = hh + L.mlp(block_p["mlp"], n, cfg.compute_dtype)
+        hh = shard_hint(hh, ("batch", "seq", "embed"), "block_out")
+        return hh, new_cache
+
+    h, cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps, cfg.compute_dtype)
+    w, transpose = _head_weight(params, cfg)
+    logits = L.logits_head(w, h[:, -1:], transpose=transpose)
+    return logits, cache
+
+
+def decode_step(params, cache, token, cache_len, cfg: ArchConfig):
+    """token: (B,1) int32; cache_len: int32 scalar. Returns (logits, cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = L.embed(params["embed"], token, cdt)
+
+    def body(carry, xs):
+        hh = carry
+        block_p, layer_cache = xs
+        n = L.rmsnorm(hh, block_p["norm1"], cfg.norm_eps, cdt)
+        a, new_cache = L.attention_decode(
+            block_p["attn"], n, cfg, cache=layer_cache, cache_len=cache_len
+        )
+        hh = hh + a
+        n = L.rmsnorm(hh, block_p["norm2"], cfg.norm_eps, cdt)
+        if "moe" in block_p:
+            y, _ = M.moe_ffn(block_p["moe"], n, cfg.moe, cdt)
+            if "shared_mlp" in block_p:
+                y = y + L.mlp(block_p["shared_mlp"], n, cdt)
+            hh = hh + y
+        else:
+            hh = hh + L.mlp(block_p["mlp"], n, cdt)
+        return hh, new_cache
+
+    h, cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps, cdt)
+    w, transpose = _head_weight(params, cfg)
+    logits = L.logits_head(w, h, transpose=transpose)
+    return logits, cache

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import cosine_with_warmup, linear_with_warmup  # noqa: F401

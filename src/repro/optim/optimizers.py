@@ -1,0 +1,157 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+* ``adamw``    — AdamW with decoupled weight decay and bias correction;
+  moment dtype configurable (fp32 default, bf16 for memory-tight configs).
+* ``adafactor`` — factored second moment for >=2-D parameters (row/col
+  statistics, Shazeer & Stern 2018), used by the 1T-parameter configs where
+  full AdamW state cannot fit the per-chip HBM budget.
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params, lr) -> (updates, state)`` where updates
+are ADDED to params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return (
+        jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree),
+        norm,
+    )
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, new_state)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1**c
+        bc2 = 1.0 - b2**c
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (
+                (-lr * step).astype(p.dtype),
+                m32.astype(moment_dtype),
+                v32.astype(moment_dtype),
+            )
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(
+    eps: float = 1e-30,
+    decay: float = 0.8,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored second-moment optimizer (no first moment)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "f": jax.tree_util.tree_map(one, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-decay)  # increasing-decay schedule
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                rfac = vr / jnp.maximum(denom, eps)
+                step = g32 / (
+                    jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+                    + eps
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g32 / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), new_s
+
+        # state["f"] subtrees are flattened only down to grads' leaf positions,
+        # so each call receives the whole {"v"} / {"vr","vc"} dict for a leaf
+        out = jax.tree_util.tree_map(upd, grads, state["f"], params)
+        is_pair = lambda x: isinstance(x, tuple)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_pair)
+        new_f = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_pair)
+        return updates, {"f": new_f, "count": count}
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+    return schedule
+
+
+def linear_with_warmup(base_lr: float, warmup_steps: int, total_steps: int):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        decay = jnp.clip(
+            1.0 - (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        return base_lr * warm * decay
+
+    return schedule

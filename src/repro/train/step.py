@@ -1,0 +1,133 @@
+"""Train-step factory: loss -> grad -> clip -> optimizer, with microbatch
+gradient accumulation (``lax.scan``) and donated buffers.
+
+The microbatch scan is also the compute/communication overlap vehicle: XLA's
+latency-hiding scheduler can overlap microbatch i's gradient reduction with
+microbatch i+1's backward once the accumulation is expressed as a loop
+(see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.build import Model
+from repro.optim.optimizers import Optimizer, clip_by_global_norm, global_norm
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # i32 scalar
+    params: Any
+    opt_state: Any
+
+
+def init_state(model: Model, rng, optimizer: Optimizer) -> tuple[TrainState, Any]:
+    params, axes = model.init(rng)
+    opt_state = optimizer.init(params)
+    return TrainState(jnp.zeros((), jnp.int32), params, opt_state), axes
+
+
+def abstract_state(model: Model, optimizer: Optimizer, seed: int = 0):
+    """ShapeDtypeStructs of the full TrainState + the param axes tree."""
+    box = {}
+
+    def build(rng):
+        p, a = model.init(rng)
+        box["axes"] = a
+        return TrainState(jnp.zeros((), jnp.int32), p, optimizer.init(p))
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(seed))
+    return shapes, box["axes"]
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} % accum {accum} != 0"
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    schedule,
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_accum > 1 scans over microbatches accumulating the mean gradient in
+    fp32 before one optimizer application.
+    """
+    cfg: ArchConfig = model.cfg
+
+    def loss_fn(params, microbatch):
+        loss, metrics = model.loss(params, microbatch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_microbatches(batch, grad_accum)
+
+            def accum_body(carry, mb):
+                gsum, lsum = carry
+                (l, _m), g = grad_fn(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                accum_body, (gzero, 0.0), micro
+            )
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / grad_accum), gsum
+            )
+            loss = lsum / grad_accum
+            metrics = {}
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(state.step)
+        updates, opt_state = optimizer.update(
+            grads, state.opt_state, params, lr
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+            params,
+            updates,
+        )
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr,
+            **{k: v for k, v in (metrics or {}).items()},
+        }
+        return (
+            TrainState(state.step + 1, new_params, opt_state),
+            out_metrics,
+        )
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

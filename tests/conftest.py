@@ -1,0 +1,17 @@
+"""Shared test config.
+
+NOTE: no XLA_FLAGS here by design — tests must see the real (single) CPU
+device; only the dry-run subprocess uses the 512-device override.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,186 @@
+"""Checkpointing (incl. corruption fallback + async), data pipeline
+determinism/disjointness, and the fault-tolerance components."""
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore, save
+from repro.configs.base import ShapeConfig, get_config
+from repro.data import Prefetcher, SyntheticTokens, make_train_iterator
+from repro.ft import (
+    HeartbeatMonitor,
+    StepTimeMonitor,
+    StragglerPolicy,
+    plan_remesh,
+)
+
+
+def tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)},
+    }
+
+
+def test_ckpt_roundtrip(tmp_path):
+    t = tree()
+    save(t, str(tmp_path), step=5)
+    out = restore(t, str(tmp_path))
+    assert out is not None
+    restored, step = out
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["b"]["c"]), np.asarray(t["b"]["c"])
+    )
+
+
+def test_ckpt_gc_keeps_last_k(tmp_path):
+    t = tree()
+    for s in range(6):
+        save(t, str(tmp_path), step=s, keep=3)
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(tmp_path) if d.startswith("step")
+    )
+    assert steps == [3, 4, 5]
+
+
+def test_ckpt_corruption_falls_back(tmp_path):
+    t = tree()
+    save(t, str(tmp_path), step=1)
+    save(t, str(tmp_path), step=2)
+    # corrupt the newest manifest
+    bad = os.path.join(tmp_path, "step_00000002", "manifest.json")
+    with open(bad, "w") as f:
+        f.write("{not json")
+    restored, step = restore(t, str(tmp_path))
+    assert step == 1
+
+
+def test_ckpt_incomplete_manifest_skipped(tmp_path):
+    t = tree()
+    save(t, str(tmp_path), step=1)
+    save(t, str(tmp_path), step=3)
+    m = os.path.join(tmp_path, "step_00000003", "manifest.json")
+    data = json.load(open(m))
+    data["complete"] = False
+    json.dump(data, open(m, "w"))
+    restored, step = restore(t, str(tmp_path))
+    assert step == 1
+
+
+def test_async_checkpointer(tmp_path):
+    t = tree()
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(t, 7)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_ckpt_shape_mismatch_rejected(tmp_path):
+    t = tree()
+    save(t, str(tmp_path), step=1)
+    other = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.zeros((3,), jnp.int32)}}
+    assert restore(other, str(tmp_path)) is None  # shape check skips it
+
+
+# -- data ---------------------------------------------------------------------
+
+
+def test_data_deterministic():
+    src = SyntheticTokens(vocab_size=100, seq_len=16, global_batch=4)
+    a = src.batch_at(3)
+    b = src.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_hosts_disjoint():
+    kw = dict(vocab_size=1000, seq_len=64, global_batch=8, num_hosts=2)
+    h0 = SyntheticTokens(host_id=0, **kw).batch_at(0)
+    h1 = SyntheticTokens(host_id=1, **kw).batch_at(0)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    assert h0["tokens"].shape == (4, 64)
+
+
+def test_data_restart_resumes_identically():
+    cfg = get_config("llama3.2-1b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    it1 = make_train_iterator(cfg, shape, start_step=0)
+    batches = [next(it1) for _ in range(5)]
+    it1.close()
+    it2 = make_train_iterator(cfg, shape, start_step=3)
+    resumed = next(it2)
+    it2.close()
+    np.testing.assert_array_equal(batches[3]["tokens"], resumed["tokens"])
+
+
+def test_data_labels_are_shifted():
+    src = SyntheticTokens(vocab_size=50, seq_len=8, global_batch=2)
+    b = src.batch_at(0)
+    # labels[i] is the next token of tokens[i] by construction
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_prefetcher_propagates_errors():
+    def boom():
+        yield {"x": 1}
+        raise RuntimeError("source died")
+
+    pf = Prefetcher(boom())
+    assert next(pf) == {"x": 1}
+    with pytest.raises(RuntimeError):
+        next(pf)
+        next(pf)
+
+
+# -- fault tolerance --------------------------------------------------------------
+
+
+def test_heartbeat_detects_dead(tmp_path):
+    clock = {"t": 1000.0}
+    hb = HeartbeatMonitor(str(tmp_path), num_hosts=3, timeout_s=30,
+                          clock=lambda: clock["t"])
+    for h in range(3):
+        hb.beat(h, step=1)
+    assert hb.dead_hosts() == []
+    clock["t"] += 60
+    hb.beat(1, step=2)
+    assert hb.dead_hosts() == [0, 2]
+    assert not hb.quorum()
+
+
+def test_plan_remesh_shrinks_data_axis():
+    plan = plan_remesh((2, 16, 16), ("pod", "data", "model"),
+                       available_chips=16 * 16, global_batch=256)
+    assert plan.new_shape[-1] == 16  # model preserved
+    assert plan.new_chips <= 256
+    assert plan.batch_divisible
+
+
+def test_plan_remesh_partial_loss():
+    # lost 3 chips of 512 -> largest feasible data budget
+    plan = plan_remesh((2, 16, 16), ("pod", "data", "model"),
+                       available_chips=509, global_batch=256)
+    assert plan.new_chips <= 509
+    assert plan.new_chips % 16 == 0
+
+
+def test_plan_remesh_too_small_raises():
+    with pytest.raises(ValueError):
+        plan_remesh((2, 16, 16), ("pod", "data", "model"),
+                    available_chips=8, global_batch=256)
+
+
+def test_straggler_policy_escalates():
+    mon = StepTimeMonitor(window=8)
+    pol = StragglerPolicy(slow_factor=1.5, evict_after=2)
+    for step in range(4):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 3.0)
+        verdict = pol.assess(mon)
+    assert verdict[2] == "evict"
+    assert verdict[0] == "ok"

@@ -1,0 +1,55 @@
+"""End-to-end dry-run smoke via subprocess (512 host devices).
+
+One real cell through the actual ``repro.launch.dryrun`` CLI proves the
+device-count override, mesh construction, sharding resolution, lowering,
+compile, memory/cost analysis, and HLO parse all compose.  Heavier cells are
+exercised by the full sweep (see EXPERIMENTS.md §Dry-run).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "llama3.2-1b", "--shape", "decode_32k",
+            "--mesh", "single", "--out", str(tmp_path),
+        ],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "llama3.2-1b__decode_32k__single.json"))
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["chips"] == 256
+    assert rec["summary"]["flops"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "llama3.2-1b", "--shape", "long_500k",
+            "--mesh", "single", "--out", str(tmp_path),
+        ],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0
+    rec = json.load(open(tmp_path / "llama3.2-1b__long_500k__single.json"))
+    assert rec["status"] == "skipped"
+    assert "sub-quadratic" in rec["reason"]

@@ -1,0 +1,121 @@
+"""Estimator fallback chain, learned-model quality, DB roundtrip/merge."""
+import math
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.database import ProfileDB, ProfileEntry
+from repro.core.estimator import OpTimeEstimator, fit_time_model
+from repro.core.graph import OpNode
+from repro.core.hardware import CPU_HOST, TPU_V5E
+from repro.core.newop import NewOpProfiler
+
+
+def test_analytic_fallback_roofline():
+    est = OpTimeEstimator(TPU_V5E)
+    compute_bound = OpNode(0, "big_dot", "dot", flops=1e12, in_bytes=1e6, out_bytes=1e6)
+    memory_bound = OpNode(1, "copy", "fusion:kLoop", flops=1e3, in_bytes=1e10, out_bytes=1e10)
+    t1 = est.duration(compute_bound)
+    t2 = est.duration(memory_bound)
+    assert t1 == pytest.approx(1e12 / (197e12 * 0.85), rel=1e-6)
+    assert t2 == pytest.approx(2e10 / 819e9, rel=1e-6)
+
+
+def test_collective_time_ring_model():
+    est = OpTimeEstimator(TPU_V5E)
+    node = OpNode(0, "ar", "all-reduce", comm_bytes=1e9, group_size=16,
+                  link_kind="ici")
+    t = est.duration(node)
+    expect = 2 * 15 / 16 * 1e9 / 50e9
+    assert t == pytest.approx(expect, rel=0.01)
+    node_dcn = OpNode(1, "ar", "all-reduce", comm_bytes=1e9, group_size=2,
+                      link_kind="dcn")
+    assert est.duration(node_dcn) > 0
+
+
+def test_learned_model_interpolates():
+    """Fit on a synthetic linear law; held-out prediction within 25%."""
+    pts = []
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        f = 10 ** rng.uniform(6, 11)
+        b = 10 ** rng.uniform(4, 9)
+        t = f / 1e11 + b / 1e10 + 1e-5
+        pts.append((f, b, t))
+    m = fit_time_model(pts)
+    errs = []
+    for _ in range(50):
+        f = 10 ** rng.uniform(6.5, 10.5)
+        b = 10 ** rng.uniform(4.5, 8.5)
+        t = f / 1e11 + b / 1e10 + 1e-5
+        errs.append(abs(m.predict(f, b) - t) / t)
+    assert np.median(errs) < 0.25
+
+
+def test_db_exact_hit_wins():
+    db = ProfileDB()
+    db.add("cpu_host", "dot", ProfileEntry({"m": 8, "k": 8, "n": 8}, 0.123, 0.0))
+    est = OpTimeEstimator(CPU_HOST, db, use_learned=False)
+    node = OpNode(0, "d", "dot", flops=1024, in_bytes=512, out_bytes=256,
+                  meta={"db_args": {"m": 8, "k": 8, "n": 8}})
+    assert est.duration(node) == pytest.approx(0.123)
+    assert est.stats["db"] == 1
+
+
+def test_newop_profiler_inserts():
+    db = ProfileDB()
+    prof = NewOpProfiler(db, "cpu_host", repeats=2)
+    node = OpNode(0, "x", "custom-call", flops=2.0 * 32**3, in_bytes=1e4,
+                  out_bytes=1e4)
+    t = prof.try_profile(node)
+    assert t is not None and t > 0
+    assert len(db.entries("cpu_host", "custom-call")) == 1
+    # second call is a DB hit (same key)
+    t2 = prof.try_profile(node)
+    assert t2 == pytest.approx(t)
+
+
+def test_db_roundtrip(tmp_path):
+    db = ProfileDB()
+    db.add("p", "dot", ProfileEntry({"m": 2}, 1.0, 0.1, n=5, flops=8, bytes=16))
+    db.meta("p")["peak_flops"] = 1e12
+    path = os.path.join(tmp_path, "db.json")
+    db.save(path)
+    db2 = ProfileDB.load(path)
+    e = db2.lookup("p", "dot", {"m": 2})
+    assert e is not None and e.mean_s == 1.0 and e.n == 5
+    assert db2.meta("p")["peak_flops"] == 1e12
+
+
+def test_db_merge_prefers_higher_samples():
+    a, b = ProfileDB(), ProfileDB()
+    a.add("p", "dot", ProfileEntry({"m": 2}, 1.0, 0.0, n=3))
+    b.add("p", "dot", ProfileEntry({"m": 2}, 2.0, 0.0, n=10))
+    b.add("p", "dot", ProfileEntry({"m": 4}, 3.0, 0.0, n=1))
+    a.merge(b)
+    assert a.lookup("p", "dot", {"m": 2}).mean_s == 2.0
+    assert a.lookup("p", "dot", {"m": 4}).mean_s == 3.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(1, 1_000_000),
+            st.floats(1e-6, 1.0, allow_nan=False),
+        ),
+        min_size=1, max_size=20,
+    )
+)
+def test_db_roundtrip_property(tmp_path_factory, entries):
+    db = ProfileDB()
+    for i, (size, t) in enumerate(entries):
+        db.add("p", "op", ProfileEntry({"size": size}, t, 0.0, n=i + 1))
+    path = str(tmp_path_factory.mktemp("db") / "db.json")
+    db.save(path)
+    db2 = ProfileDB.load(path)
+    assert len(db2) == len(db)
+    for size, _ in entries:
+        assert db2.lookup("p", "op", {"size": size}) is not None

@@ -1,0 +1,115 @@
+"""HLO parser: live-lowered modules + golden collective classification."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hlo_parser import (
+    MeshInfo,
+    decode_replica_groups,
+    module_summary,
+    parse_instruction,
+    parse_module,
+    parse_type,
+)
+
+
+def test_parse_type_array():
+    t, i = parse_type("f32[16,128]{1,0} rest")
+    assert t.parts[0].dims == (16, 128)
+    assert t.nbytes == 16 * 128 * 4
+
+
+def test_parse_type_tuple_with_comments():
+    line = "%w = (s32[], bf16[4,8]{1,0}, /*index=2*/f32[2]) while(%t), condition=%c, body=%b"
+    ins = parse_instruction(line)
+    assert ins is not None
+    assert ins.opcode == "while"
+    assert ins.attrs["condition"] == "%c"
+    assert ins.attrs["body"] == "%b"
+    assert ins.out.nbytes == 4 + 4 * 8 * 2 + 2 * 4
+
+
+def test_parse_instruction_collective():
+    line = (
+        "  %all-reduce.2 = f32[16,128]{1,0} all-reduce(%dot.1), channel_id=1, "
+        "replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add"
+    )
+    ins = parse_instruction(line)
+    assert ins.opcode == "all-reduce"
+    assert ins.operands == ["dot.1"]
+    gsize, link = decode_replica_groups(ins.attrs["replica_groups"], None)
+    assert gsize == 4
+
+
+def test_replica_group_dcn_classification():
+    mesh = MeshInfo(("pod", "data", "model"), (2, 16, 16), dcn_axes=("pod",))
+    # groups of 2 varying the pod axis (leading dim under T(1,2,0))
+    gs, link = decode_replica_groups("[256,2]<=[2,16,16]T(1,2,0)", mesh)
+    assert gs == 2 and link == "dcn"
+    # groups of 16 varying the model axis
+    gs, link = decode_replica_groups("[32,16]<=[512]", mesh)
+    assert gs == 16 and link == "ici"
+
+
+def test_scan_flops_expansion():
+    """Loop-expanded parser flops must match the unrolled program's."""
+
+    def unrolled(x, w):
+        for _ in range(6):
+            x = jnp.tanh(x @ w)
+        return x
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return y
+
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    su = module_summary(jax.jit(unrolled).lower(xs, ws).compile().as_text())
+    ss = module_summary(jax.jit(scanned).lower(xs, ws).compile().as_text())
+    dot_flops = 6 * 2 * 128 * 128 * 128
+    assert su["flops"] >= dot_flops
+    assert ss["flops"] >= dot_flops
+    assert abs(ss["flops"] - su["flops"]) / su["flops"] < 0.2
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    xs = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    s = module_summary(jax.jit(f).lower(xs, ws).compile().as_text())
+    assert s["flops"] == pytest.approx(2 * 64 * 256 * 32, rel=0.01)
+
+
+def test_nested_scan_expansion():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    xs = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    s = module_summary(jax.jit(f).lower(xs, ws).compile().as_text())
+    assert s["flops"] >= 12 * 2 * 32**3  # 4 x 3 inner dots
+
+
+def test_graph_is_dag_and_validates():
+    def f(x):
+        return jnp.sum(jnp.tanh(x) * x)
+
+    xs = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    s = module_summary(jax.jit(f).lower(xs).compile().as_text())
+    g = s["graph"]
+    g.validate()
+    assert len(g) > 0

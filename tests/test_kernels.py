@@ -1,0 +1,128 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, fused_rmsnorm, ssd_scan
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+# -- flash attention -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 128, 4, 4, 64),       # MHA, exact block
+    (2, 200, 8, 2, 64),       # GQA, ragged seq (padding path)
+    (1, 384, 6, 3, 128),      # head_dim 128, group 2
+    (2, 64, 2, 1, 32),        # MQA, small
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(rng, b, s, h, kh, d, dtype, causal):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kh, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kh, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+    )
+
+
+def test_flash_attention_grad_matches_ref(rng):
+    q = jnp.asarray(rng.standard_normal((1, 96, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 96, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 96, 2, 32)), jnp.float32)
+
+    g1 = jax.grad(lambda q_: flash_attention(q_, k, v).sum())(q)
+    g2 = jax.grad(lambda q_: attention_ref(q_, k, v).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_cross_lengths(rng):
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=128)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# -- rmsnorm ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 37, 512), (2, 4, 8, 128), (1, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rng, shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    w = jnp.asarray(rng.standard_normal(shape[-1]), dtype)
+    out = fused_rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+    )
+
+
+def test_rmsnorm_grad(rng):
+    x = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+    g1 = jax.grad(lambda x_: fused_rmsnorm(x_, w).sum())(x)
+    g2 = jax.grad(lambda x_: rmsnorm_ref(x_, w).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-5)
+
+
+# -- ssd scan ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 32, 32, 32),
+    (2, 256, 4, 32, 64, 64),
+    (1, 192, 1, 64, 128, 64),   # odd chunk count
+    (2, 64, 8, 16, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(rng, b, s, h, p, n, chunk, dtype):
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), dtype)
+    B = jnp.asarray(rng.standard_normal((b, s, h, n)), dtype)
+    C = jnp.asarray(rng.standard_normal((b, s, h, n)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 1.0, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-np.exp(rng.standard_normal(h)), jnp.float32)
+    y, st = ssd_scan(x, B, C, dt, A, chunk=chunk)
+    yr, str_ = ssd_scan_ref(x, B, C, dt, A, chunk)
+    t = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), **t
+    )
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_), **t)
+
+
+def test_ssd_state_equals_sequential_recurrence(rng):
+    """The chunked kernel's final state == token-by-token recurrence."""
+    b, s, h, p, n = 1, 64, 2, 8, 16
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-np.exp(rng.standard_normal(h)), jnp.float32)
+    _, st = ssd_scan(x, B, C, dt, A, chunk=16)
+    state = np.zeros((b, h, n, p), np.float32)
+    for t in range(s):
+        decay = np.exp(np.asarray(dt[:, t] * A))  # (b,h)
+        contrib = np.einsum(
+            "bhn,bhp->bhnp",
+            np.asarray(B[:, t] * dt[:, t][..., None]),
+            np.asarray(x[:, t]),
+        )
+        state = state * decay[:, :, None, None] + contrib
+    np.testing.assert_allclose(np.asarray(st), state, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,117 @@
+"""Roofline extraction, timeline export, report generation."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import (
+    TPU_V5E,
+    build_report,
+    model_flops,
+    module_summary,
+    simulate,
+    to_chrome_trace,
+)
+from repro.core.estimator import OpTimeEstimator
+from repro.core.roofline import to_row
+
+
+def _small_summary():
+    def f(x, w):
+        return jnp.tanh(x @ w).sum()
+
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    return module_summary(jax.jit(f).lower(xs, ws).compile().as_text())
+
+
+def test_roofline_terms_positive_and_dominant():
+    cfg = get_config("llama3.2-1b")
+    rep = build_report(cfg, SHAPES["train_4k"], "single", 256, _small_summary())
+    assert rep.compute_s > 0 and rep.memory_s > 0
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert rep.bound_time_s == max(
+        rep.compute_s, rep.memory_s, rep.collective_s
+    )
+    row = to_row(rep)
+    assert set(row) >= {"arch", "shape", "dominant", "useful_flop_ratio"}
+
+
+def test_model_flops_kinds():
+    cfg = get_config("llama3.2-1b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_params()
+    assert t == pytest.approx(6 * n * 256 * 4096)
+    assert p == pytest.approx(2 * n * 32 * 32768)
+    assert d == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_params_smaller_than_total():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert cfg.active_params() < 0.06 * cfg.num_params()  # ~32B of 1T
+
+
+def test_chrome_trace_export(tmp_path):
+    s = _small_summary()
+    est = OpTimeEstimator(TPU_V5E)
+    res = simulate(s["graph"], est.duration, record_events=True)
+    path = os.path.join(tmp_path, "trace.json")
+    trace = to_chrome_trace(res, path)
+    raw = json.load(open(path))
+    events = [e for e in raw["traceEvents"] if e.get("ph") == "X"]
+    assert events, "no duration events exported"
+    assert all(e["dur"] >= 0 for e in events)
+    names = {e["args"]["name"] for e in raw["traceEvents"] if e.get("ph") == "M"}
+    assert "chip" in names
+
+
+def test_report_generator_runs_on_sweep_data():
+    from benchmarks.roofline_report import dryrun_table, load, roofline_table
+
+    recs = load()
+    if not recs:
+        pytest.skip("no sweep data present")
+    t1 = dryrun_table(recs)
+    t2 = roofline_table(recs, "single")
+    assert t1.count("|") > 50 and "arch" in t1
+    assert "dominant" not in t2 or "compute" in t2 or "memory" in t2
+
+
+def test_dot_meta_recovered():
+    def f(a, b):
+        return a @ b
+
+    xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    s = module_summary(jax.jit(f).lower(xs, ws).compile().as_text())
+    dots = [n for n in s["graph"].nodes if n.kind == "dot"]
+    assert dots and dots[0].meta.get("dot")
+    d = dots[0].meta["dot"]
+    assert d["lhs"] == [32, 64] and d["rhs"] == [64, 16]
+    assert d["lc"] == [1] and d["rc"] == [0]
+
+
+def test_estimator_overhead_and_clamp():
+    from repro.core.database import ProfileDB, ProfileEntry
+    from repro.core.graph import OpNode
+    from repro.core.hardware import CPU_HOST
+
+    db = ProfileDB()
+    db.meta("cpu_host")["op_overhead_s"] = 1e-6
+    # enough points to fit a vector model with a wild law
+    for i in range(2, 22):
+        db.add("cpu_host", "add",
+               ProfileEntry({"size": 2**i}, 1e-3, 0.0, n=3,
+                            flops=2.0**i, bytes=2.0**i * 8))
+    est = OpTimeEstimator(CPU_HOST, db)
+    # zero-flop giant copy: clamp must keep it near the analytic roofline
+    node = OpNode(0, "c", "copy", flops=0.0, in_bytes=1e9, out_bytes=1e9)
+    t = est.duration(node)
+    analytic = 2e9 / CPU_HOST.chip.hbm_bw
+    assert t <= 50 * analytic + 1e-3
+    assert t >= 0.25 * analytic

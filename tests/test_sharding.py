@@ -1,0 +1,91 @@
+"""Sharding resolver: divisibility fallback, axis reuse, ZeRO, drops."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import DEFAULT_RULES, make_ctx
+
+
+def mesh1():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def fake_ctx(sizes: dict, overrides=None):
+    """ShardingCtx with a fake mesh exposing axis names/sizes."""
+    import types
+
+    ctx = make_ctx(mesh1(), overrides=overrides)
+
+    class FakeMesh:
+        axis_names = tuple(sizes)
+        devices = types.SimpleNamespace(shape=tuple(sizes.values()))
+
+    ctx.mesh = FakeMesh()
+    return ctx
+
+
+def test_divisible_shard():
+    ctx = fake_ctx({"data": 16, "model": 16})
+    spec = ctx.spec_for(("vocab", "embed"), (128256, 2048), "emb")
+    assert spec == P("model", None)
+    assert not ctx.drops
+
+
+def test_non_divisible_drops_and_logs():
+    ctx = fake_ctx({"data": 16, "model": 16})
+    spec = ctx.spec_for(("vocab", "embed"), (49155, 2048), "emb")
+    assert spec == P(None, None)
+    assert len(ctx.drops) == 1
+    assert "49155 % 16" in ctx.drops[0].reason
+
+
+def test_heads_fallback_phi4():
+    ctx = fake_ctx({"data": 16, "model": 16})
+    spec = ctx.spec_for(("embed", "heads", "head_dim"), (3072, 24, 128), "wq")
+    assert spec == P(None, None, None)  # 24 % 16 != 0 -> replicate heads
+
+
+def test_batch_multi_axis():
+    ctx = fake_ctx({"pod": 2, "data": 16, "model": 16})
+    spec = ctx.spec_for(("batch", None), (256, 4096), "tokens")
+    assert spec == P(("pod", "data"), None)
+
+
+def test_batch_single_pod_fallback():
+    ctx = fake_ctx({"data": 16, "model": 16})
+    spec = ctx.spec_for(("batch", None), (256, 4096), "tokens")
+    assert spec == P("data", None)
+
+
+def test_axis_reuse_forbidden():
+    ctx = fake_ctx({"data": 16, "model": 16})
+    # both logical dims want 'model'; second must fall back
+    spec = ctx.spec_for(("heads", "ffn"), (32, 8192), "weird")
+    assert spec == P("model", None)
+
+
+def test_rule_override():
+    ctx = fake_ctx(
+        {"data": 16, "model": 16},
+        overrides={"kv_seq": (("data",), ())},
+    )
+    spec = ctx.spec_for(("batch", "kv_seq", "kv_heads", "head_dim"),
+                        (1, 524288, 8, 128), "kcache")
+    assert spec == P(None, "data", None, None)
+
+
+def test_zero1_attaches_data_axis():
+    ctx = fake_ctx({"data": 16, "model": 16})
+    spec = ctx.zero_spec_for(("layers", "embed", "ffn"), (16, 2048, 8192), "wg")
+    # ffn got model; ZeRO adds data to the largest remaining divisible dim
+    flat = [a for p in spec if p for a in ((p,) if isinstance(p, str) else p)]
+    assert "data" in flat and "model" in flat
+
+
+def test_unknown_logical_axis_raises():
+    ctx = fake_ctx({"data": 2})
+    with pytest.raises(KeyError):
+        ctx.spec_for(("nonexistent",), (8,), "x")

@@ -1,0 +1,135 @@
+"""Hypothesis property tests for the sharding resolver and hardware models."""
+import types
+
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.hardware import TPU_V5E, collective_time, wire_bytes
+from repro.models.sharding import DEFAULT_RULES, make_ctx
+
+
+def fake_ctx(sizes: dict, overrides=None):
+    import jax
+
+    ctx = make_ctx(
+        jax.make_mesh((1, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2),
+        overrides=overrides,
+    )
+
+    class FakeMesh:
+        axis_names = tuple(sizes)
+        devices = types.SimpleNamespace(shape=tuple(sizes.values()))
+
+    ctx.mesh = FakeMesh()
+    return ctx
+
+
+LOGICALS = sorted(DEFAULT_RULES)
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.one_of(st.none(), st.sampled_from(LOGICALS)),
+            st.integers(1, 100_000),
+        ),
+        min_size=1, max_size=6,
+    ),
+    st.sampled_from([
+        {"data": 16, "model": 16},
+        {"pod": 2, "data": 16, "model": 16},
+        {"data": 4, "model": 2},
+        {"data": 1, "model": 1},
+    ]),
+)
+def test_resolver_invariants(dims, mesh_sizes):
+    """For ANY tensor: every sharded dim divides evenly; no mesh axis is
+    used twice; unknown axes never appear."""
+    ctx = fake_ctx(mesh_sizes)
+    axes = tuple(a for a, _ in dims)
+    shape = tuple(s for _, s in dims)
+    spec = ctx.spec_for(axes, shape, "t")
+    used = []
+    for part, size in zip(tuple(spec), shape):
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else part
+        prod = 1
+        for n in names:
+            assert n in mesh_sizes
+            used.append(n)
+            prod *= mesh_sizes[n]
+        assert size % prod == 0, (axes, shape, spec)
+    assert len(used) == len(set(used)), f"axis reused: {spec}"
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.one_of(st.none(), st.sampled_from(LOGICALS)),
+            st.integers(1, 100_000),
+        ),
+        min_size=1, max_size=5,
+    ),
+)
+def test_zero_spec_never_less_sharded(dims):
+    """zero_spec_for shards at least as much as spec_for (it only adds)."""
+    ctx = fake_ctx({"data": 16, "model": 16})
+    axes = tuple(a for a, _ in dims)
+    shape = tuple(s for _, s in dims)
+    base = tuple(ctx.spec_for(axes, shape, "t"))
+    ctx2 = fake_ctx({"data": 16, "model": 16})
+    zero = tuple(ctx2.zero_spec_for(axes, shape, "t"))
+
+    def nshards(spec):
+        n = 1
+        for p in spec:
+            if p is None:
+                continue
+            for a in (p,) if isinstance(p, str) else p:
+                n *= {"data": 16, "model": 16}[a]
+        return n
+
+    assert nshards(zero) >= nshards(base)
+    # zero specs obey the same divisibility invariant
+    for part, size in zip(zero, shape):
+        if part is None:
+            continue
+        prod = 1
+        for a in (part,) if isinstance(part, str) else part:
+            prod *= {"data": 16, "model": 16}[a]
+        assert size % prod == 0
+
+
+# -- hardware models ------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute"]),
+    st.floats(1.0, 1e12),
+    st.integers(1, 512),
+)
+def test_collective_time_nonnegative_monotone_in_bytes(kind, nbytes, group):
+    t1 = collective_time(kind, nbytes, group, TPU_V5E.ici)
+    t2 = collective_time(kind, nbytes * 2, group, TPU_V5E.ici)
+    assert t1 >= 0.0
+    assert t2 >= t1
+    if group == 1:
+        assert t1 == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1.0, 1e12), st.integers(2, 512))
+def test_allreduce_wire_bytes_bounds(nbytes, group):
+    """Ring all-reduce moves < 2x the payload; all-gather < 1x."""
+    ar = wire_bytes("all-reduce", nbytes, group)
+    ag = wire_bytes("all-gather", nbytes, group)
+    assert 0 < ar < 2 * nbytes
+    assert 0 < ag < nbytes
+    assert ar == pytest.approx(2 * ag)

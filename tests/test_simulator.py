@@ -1,0 +1,136 @@
+"""DES engine: exact schedules on known DAGs + hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import DataflowGraph
+from repro.core.simulator import Simulator, simulate
+
+
+def unit_duration(node):
+    return node.meta.get("dur", 1.0)
+
+
+def make_chain(durs):
+    g = DataflowGraph("chain")
+    prev = []
+    for i, d in enumerate(durs):
+        n = g.add(f"n{i}", "op", deps=prev, meta={"dur": d})
+        prev = [n.uid]
+    return g
+
+
+def test_serial_chain():
+    g = make_chain([1.0, 2.0, 3.0])
+    res = simulate(g, unit_duration)
+    assert res.makespan == pytest.approx(6.0)
+
+
+def test_parallel_independent_same_device():
+    g = DataflowGraph("par")
+    for i in range(4):
+        g.add(f"n{i}", "op", meta={"dur": 1.0})
+    res = simulate(g, unit_duration)
+    # one compute device FIFO -> serialized
+    assert res.makespan == pytest.approx(4.0)
+
+
+def test_parallel_two_devices():
+    g = DataflowGraph("par2")
+    g.add("a", "op", meta={"dur": 3.0})
+    g.add("b", "op", device="other", meta={"dur": 2.0})
+    res = simulate(g, unit_duration)
+    assert res.makespan == pytest.approx(3.0)
+    assert res.device_busy["chip"] == pytest.approx(3.0)
+    assert res.device_busy["other"] == pytest.approx(2.0)
+
+
+def test_diamond_dependency():
+    g = DataflowGraph("diamond")
+    a = g.add("a", "op", meta={"dur": 1.0})
+    b = g.add("b", "op", deps=[a.uid], device="d1", meta={"dur": 5.0})
+    c = g.add("c", "op", deps=[a.uid], device="d2", meta={"dur": 2.0})
+    g.add("d", "op", deps=[b.uid, c.uid], meta={"dur": 1.0})
+    res = simulate(g, unit_duration)
+    assert res.makespan == pytest.approx(7.0)  # 1 + max(5,2) + 1
+
+
+def test_comm_overlaps_compute():
+    """A collective on the link device overlaps independent compute."""
+    g = DataflowGraph("overlap")
+    a = g.add("a", "op", meta={"dur": 4.0})
+    g.add(
+        "ar", "all-reduce", comm_bytes=1.0, group_size=4, link_kind="ici",
+        meta={"dur": 3.0},
+    )
+    res = simulate(g, unit_duration)
+    assert res.makespan == pytest.approx(4.0)
+
+
+# -- hypothesis property tests -------------------------------------------------
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(1, 40))
+    g = DataflowGraph("rand")
+    for i in range(n):
+        max_deps = min(i, 4)
+        k = draw(st.integers(0, max_deps))
+        deps = sorted(
+            draw(
+                st.lists(
+                    st.integers(0, i - 1), min_size=k, max_size=k, unique=True
+                )
+            )
+        ) if i > 0 else []
+        dur = draw(st.floats(0.0, 10.0, allow_nan=False))
+        dev = draw(st.sampled_from([None, "d1", "d2"]))
+        g.add(f"n{i}", "op", deps=deps, device=dev, meta={"dur": dur})
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_dag())
+def test_makespan_bounds(g):
+    res = simulate(g, unit_duration)
+    total = sum(n.meta["dur"] for n in g.nodes)
+    crit = g.critical_path(unit_duration)
+    max_busy = max(res.device_busy.values(), default=0.0)
+    assert res.makespan <= total + 1e-9          # never worse than serial
+    assert res.makespan >= crit - 1e-9           # critical path lower bound
+    assert res.makespan >= max_busy - 1e-9       # busiest device lower bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_dag())
+def test_determinism(g):
+    r1 = simulate(g, unit_duration)
+    r2 = simulate(g, unit_duration)
+    assert r1.makespan == r2.makespan
+    assert r1.device_busy == r2.device_busy
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_dag(), st.floats(0.1, 10.0))
+def test_adding_node_monotone(g, dur):
+    """Appending a dependent node never reduces the makespan."""
+    before = simulate(g, unit_duration).makespan
+    deps = [len(g.nodes) - 1] if len(g.nodes) else []
+    g.add("extra", "op", deps=deps, meta={"dur": dur})
+    after = simulate(g, unit_duration).makespan
+    assert after >= before - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_dag())
+def test_events_consistent(g):
+    res = Simulator(unit_duration, record_events=True).run(g)
+    # per-device events don't overlap and are ordered
+    by_dev = {}
+    for e in res.events:
+        by_dev.setdefault(e.device, []).append(e)
+    for evs in by_dev.values():
+        evs.sort(key=lambda e: e.start)
+        for a, b in zip(evs, evs[1:]):
+            assert a.end <= b.start + 1e-9

@@ -1,0 +1,91 @@
+"""Pipeline schedule graphs + autotuner behavior."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.autotuner import Autotuner, layer_cost_from_config
+from repro.core.graph import OpNode
+from repro.core.simulator import simulate
+from repro.core.strategy import LayerCost, Strategy, pipeline_graph
+
+
+def const_duration(node: OpNode) -> float:
+    if node.kind == "fwd":
+        return 1.0
+    if node.kind == "bwd":
+        return 2.0
+    return 0.0  # comm free
+
+
+def test_gpipe_bubble_formula():
+    """GPipe with zero comm: makespan = (M + S - 1)*t_f + (M + S - 1)*t_b."""
+    S, M = 4, 8
+    g = pipeline_graph(
+        8, LayerCost(fwd_flops=1, fwd_bytes=0, boundary_bytes=0),
+        Strategy(pp=S, microbatches=M, schedule="gpipe"),
+    )
+    res = simulate(g, const_duration)
+    expect = (M + S - 1) * 1.0 + (M + S - 1) * 2.0
+    assert res.makespan == pytest.approx(expect)
+
+
+def test_1f1b_no_worse_than_gpipe():
+    S, M = 4, 8
+    cost = LayerCost(fwd_flops=1, fwd_bytes=0, boundary_bytes=0)
+    g1 = pipeline_graph(8, cost, Strategy(pp=S, microbatches=M, schedule="1f1b"))
+    g2 = pipeline_graph(8, cost, Strategy(pp=S, microbatches=M, schedule="gpipe"))
+    m1 = simulate(g1, const_duration).makespan
+    m2 = simulate(g2, const_duration).makespan
+    assert m1 <= m2 + 1e-9
+
+
+def test_more_microbatches_reduce_bubble():
+    cost = LayerCost(fwd_flops=1, fwd_bytes=0, boundary_bytes=0)
+
+    def bubble(M):
+        g = pipeline_graph(
+            8, cost, Strategy(pp=4, microbatches=M, schedule="gpipe")
+        )
+        res = simulate(g, const_duration)
+        busy = max(
+            t for d, t in res.device_busy.items() if d.startswith("stage")
+        )
+        return 1 - busy / res.makespan
+
+    assert bubble(16) < bubble(2)
+
+
+def test_grad_allreduce_appended():
+    g = pipeline_graph(
+        4,
+        LayerCost(fwd_flops=1, fwd_bytes=0, boundary_bytes=0, grad_bytes=100),
+        Strategy(dp=4, pp=2, microbatches=2),
+    )
+    kinds = [n.kind for n in g.nodes]
+    assert kinds.count("all-reduce") == 2  # one per stage
+
+
+def test_autotuner_prefers_parallelism():
+    cfg = get_config("llama3.2-1b")
+    tuner = Autotuner(cfg, chips=64, global_batch=256, seq=2048)
+    results = tuner.search(microbatch_options=(1, 4, 8))
+    assert len(results) > 3
+    best, worst = results[0], results[-1]
+    assert best.makespan_s < worst.makespan_s
+    assert best.strategy.chips == 64
+
+
+def test_autotuner_straggler_slows_pipeline():
+    cfg = get_config("llama3.2-1b")
+    tuner = Autotuner(cfg, chips=16, global_batch=64, seq=1024)
+    cand = [s for s in tuner.candidates() if s.pp >= 2][0]
+    base = tuner.evaluate(cand).makespan_s
+    tuner.straggler_stage = 0
+    tuner.straggler_factor = 3.0
+    slow = tuner.evaluate(cand).makespan_s
+    assert slow > base * 1.3
+
+
+def test_layer_cost_positive():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    c = layer_cost_from_config(cfg, batch=4, seq=2048, tp=16)
+    assert c.fwd_flops > 0 and c.fwd_bytes > 0 and c.boundary_bytes > 0
