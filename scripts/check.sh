@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate: collection must be clean and the fast suite green.
+# The slow subprocess tier (forced multi-device hosts) runs with: check.sh slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "slow" ]]; then
+    exec python -m pytest -q -m slow
+fi
+
+# fail fast on import-error walls before running anything
+python -m pytest --collect-only -q >/dev/null
+
+exec python -m pytest -x -q -m "not slow"

@@ -1,0 +1,7 @@
+"""repro — offline-profiling performance simulator + executable substrate.
+
+Importing any ``repro`` submodule installs the jax version-drift shims
+first (see :mod:`repro.compat`), so model, launch, and test code can target
+one jax API surface regardless of the installed point release.
+"""
+from repro import compat as _compat  # noqa: F401  (side effect: install shims)

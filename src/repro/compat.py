@@ -1,0 +1,155 @@
+"""JAX version-drift shims (see ROADMAP.md "JAX compatibility policy").
+
+The repo targets the current jax API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``pltpu.CompilerParams``) but must run on older point releases where those
+names do not exist yet (e.g. 0.4.x ships ``jax.experimental.shard_map``,
+no ``AxisType``, and ``pltpu.TPUCompilerParams``).  Each shim resolves the
+symbol from whatever the installed jax provides and — for names that tests
+and downstream code reference *on the jax namespace itself* — installs a
+forward-compat alias so ``jax.sharding.AxisType`` / ``jax.shard_map`` work
+uniformly.  Aliases are only ever *added*; an existing attribute is never
+overwritten (on a new jax this module is a no-op).
+
+Import order: ``repro/__init__.py`` imports this module, so any
+``import repro.<anything>`` guarantees the shims are installed before model
+or test code touches jax.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+class _AxisTypeFallback(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on jax versions without it.
+
+    Pre-AxisType jax has only implicitly "auto" mesh axes, so every member
+    maps to the same behavior; the enum exists to keep call sites (and the
+    test suite) source-compatible.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _resolve_axis_type():
+    return getattr(jax.sharding, "AxisType", _AxisTypeFallback)
+
+
+AxisType = _resolve_axis_type()
+
+
+def _make_mesh_accepts_axis_types() -> bool:
+    raw = getattr(jax, "make_mesh", None)
+    if raw is None:
+        return False
+    try:
+        return "axis_types" in inspect.signature(raw).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return True  # assume modern; worst case the call raises loudly
+
+
+if _make_mesh_accepts_axis_types():
+    make_mesh = jax.make_mesh
+else:
+    _raw_make_mesh = getattr(jax, "make_mesh", None)
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # old jax: every axis is implicitly Auto; dropping the argument is
+        # semantically equivalent for the Auto-only meshes this repo builds
+        del axis_types
+        if _raw_make_mesh is not None:
+            return _raw_make_mesh(axis_shapes, axis_names, devices=devices)
+        # pre-make_mesh jax: row-major device grid (no topology-aware
+        # reordering, which host/CPU meshes don't need anyway)
+        import numpy as np
+
+        n = 1
+        for s in axis_shapes:
+            n *= s
+        devs = list(devices) if devices is not None else jax.devices()[:n]
+        return jax.sharding.Mesh(
+            np.asarray(devs).reshape(tuple(axis_shapes)), tuple(axis_names)
+        )
+
+    if _raw_make_mesh is not None:
+        make_mesh = functools.wraps(_raw_make_mesh)(make_mesh)
+
+
+def _resolve_shard_map():
+    raw = getattr(jax, "shard_map", None)
+    if raw is None:
+        from jax.experimental.shard_map import shard_map as raw  # type: ignore
+
+    try:
+        params = inspect.signature(raw).parameters
+    except (TypeError, ValueError):  # pragma: no cover
+        return raw
+    if "check_vma" in params:
+        return raw
+
+    @functools.wraps(raw)
+    def wrapped(f, /, *, mesh, in_specs, out_specs, check_vma=None,
+                check_rep=None, **kw):
+        # new-jax name is check_vma; old jax spells it check_rep
+        if check_vma is None:
+            check_vma = True if check_rep is None else check_rep
+        return raw(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, **kw)
+
+    return wrapped
+
+
+shard_map = _resolve_shard_map()
+
+
+def _resolve_tpu_compiler_params():
+    """Pallas-TPU compiler params class under either of its names.
+
+    Returns None when the pallas TPU backend cannot even be imported (some
+    CPU-only builds); kernel modules treat that as "interpret-only host".
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas always present in CI image
+        return None
+    return getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+
+
+TPUCompilerParams = _resolve_tpu_compiler_params()
+
+
+def install() -> None:
+    """Install forward-compat aliases onto the jax namespace (idempotent).
+
+    Needed because the test suite (kept source-identical to the new-jax
+    form) references ``jax.sharding.AxisType``, ``jax.shard_map`` and
+    ``jax.make_mesh(axis_types=...)`` directly rather than through repro.
+    Only missing attributes are added; nothing existing is replaced.
+    """
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not _make_mesh_accepts_axis_types():
+        jax.make_mesh = make_mesh
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover
+        pltpu = None
+    if pltpu is not None and TPUCompilerParams is not None:
+        if not hasattr(pltpu, "CompilerParams"):
+            pltpu.CompilerParams = TPUCompilerParams
+        if not hasattr(pltpu, "TPUCompilerParams"):
+            pltpu.TPUCompilerParams = TPUCompilerParams
+
+
+install()

@@ -141,6 +141,32 @@ _MODEL_SOURCES = {
 }
 
 
+def dist_comm_bytes(node: OpNode) -> float:
+    """Default comm-volume hook: price annotated collectives with the byte
+    counts the executable dist layer actually moves.
+
+    Graph producers annotate rather than pre-bake: ``comm_bytes`` stays the
+    raw dense payload and ``node.meta`` carries the strategy —
+    ``{"compression": scheme, "grad_elems": n}`` on a compressed gradient
+    all-reduce (see ``repro.core.strategy.pipeline_graph``), or
+    ``{"moe_a2a": {...}}`` on an expert-parallel all-to-all (see
+    ``repro.core.strategy.moe_a2a_node_meta``).  Unannotated nodes pass
+    through unchanged, so estimators stay backward-compatible.
+    """
+    scheme = node.meta.get("compression")
+    if scheme and scheme != "none":
+        from repro.dist.compress import compressed_allreduce_bytes
+
+        elems = int(node.meta.get("grad_elems") or node.comm_bytes // 4)
+        return compressed_allreduce_bytes(elems, scheme=scheme)
+    a2a = node.meta.get("moe_a2a")
+    if a2a:
+        from repro.dist.ep_a2a import a2a_payload_bytes
+
+        return a2a_payload_bytes(**a2a)
+    return node.comm_bytes
+
+
 def _model_key_for(kind: str) -> str:
     if kind in ("dot", "convolution"):
         return "dot"
@@ -160,10 +186,13 @@ class OpTimeEstimator:
         db: Optional[ProfileDB] = None,
         use_learned: bool = True,
         new_op_profiler=None,
+        comm_bytes_fn=dist_comm_bytes,
     ):
         self.platform = platform
         self.db = db
         self.new_op_profiler = new_op_profiler
+        # comm-volume hook: OpNode -> effective per-device payload bytes
+        self.comm_bytes_fn = comm_bytes_fn
         self.models: dict[str, MLPModel] = {}
         self.dispatch_s = 0.0
         self.op_overhead_s = 0.0
@@ -263,19 +292,22 @@ class OpTimeEstimator:
 
     def _collective(self, node: OpNode) -> float:
         link = self.platform.link_for(node.link_kind)
+        nbytes = (
+            self.comm_bytes_fn(node)
+            if self.comm_bytes_fn is not None
+            else node.comm_bytes
+        )
         # 1. exact DB hit (measured collectives on this platform)
         if self.db is not None:
             e = self.db.lookup(
                 self.platform.name,
                 node.kind,
                 {
-                    "per_device_bytes": int(node.comm_bytes),
+                    "per_device_bytes": int(nbytes),
                     "devices": node.group_size,
                 },
             )
             if e is not None:
                 self.stats["db"] += 1
                 return e.mean_s
-        return collective_time(
-            node.kind, node.comm_bytes, node.group_size, link
-        )
+        return collective_time(node.kind, nbytes, node.group_size, link)

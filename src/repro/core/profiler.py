@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import AxisType, make_mesh, shard_map
 from repro.core.database import ProfileDB, ProfileEntry
 from repro.core.hardware import CPU_HOST, ChipSpec, LinkSpec, PlatformSpec
 
@@ -249,9 +250,7 @@ class OfflineProfiler:
         if ndev < 2:
             return 0
         sizes = _grid(sizes or [2**p for p in range(12, 24, 2)], values_per_arg)
-        mesh = jax.make_mesh(
-            (ndev,), ("x",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = make_mesh((ndev,), ("x",), axis_types=(AxisType.Auto,))
         from jax.sharding import NamedSharding, PartitionSpec as P
         import functools
 
@@ -279,20 +278,20 @@ class OfflineProfiler:
             count += 1
 
         def ar(x):
-            return jax.shard_map(
+            return shard_map(
                 lambda v: jax.lax.psum(v, "x"), mesh=mesh,
                 in_specs=P("x"), out_specs=P(), check_vma=False,
             )(x)
 
         def ag(x):
-            return jax.shard_map(
+            return shard_map(
                 lambda v: jax.lax.all_gather(v, "x", tiled=True), mesh=mesh,
                 in_specs=P("x"), out_specs=P(), check_vma=False,
             )(x)
 
         def ppm(x):
             perm = [(i, (i + 1) % ndev) for i in range(ndev)]
-            return jax.shard_map(
+            return shard_map(
                 lambda v: jax.lax.ppermute(v, "x", perm), mesh=mesh,
                 in_specs=P("x"), out_specs=P("x"), check_vma=False,
             )(x)

@@ -28,15 +28,20 @@ class Strategy:
     schedule: str = "1f1b"      # "gpipe" | "1f1b"
     remat: str = "dots"
     zero1: bool = False
+    # gradient-compression scheme applied to the dp all-reduce: "none",
+    # "int8" (numerics executable via repro.dist.compress.compressed_psum),
+    # or "topk:<frac>" (byte-accounting only — see compressed_allreduce_bytes)
+    compression: str = "none"
 
     @property
     def chips(self) -> int:
         return self.dp * self.tp * self.pp
 
     def describe(self) -> str:
+        tag = "" if self.compression == "none" else f",{self.compression}"
         return (
             f"dp{self.dp}xtp{self.tp}xpp{self.pp}"
-            f"(ep{self.ep},mb{self.microbatches},{self.schedule})"
+            f"(ep{self.ep},mb{self.microbatches},{self.schedule}{tag})"
         )
 
 
@@ -136,6 +141,7 @@ def pipeline_graph(
                     f"sendF{s}.{m}", "collective-permute", [f"F{s}.{m}"],
                     comm_bytes=cost.boundary_bytes, group_size=2,
                     link_kind="ici", device="link:pp",
+                    meta={"transfer": "pp_boundary"},
                 )
     for m in range(M):
         for s in reversed(range(S)):
@@ -154,13 +160,49 @@ def pipeline_graph(
                     f"sendB{s}.{m}", "collective-permute", [f"B{s}.{m}"],
                     comm_bytes=cost.boundary_bytes, group_size=2,
                     link_kind="ici", device="link:pp",
+                    meta={"transfer": "pp_boundary"},
                 )
     if strategy.dp > 1 and cost.grad_bytes > 0:
+        # comm_bytes stays the RAW f32 payload; the compression annotation is
+        # resolved to the dist layer's actual wire bytes at estimation time
+        # (repro.core.estimator.dist_comm_bytes), keeping the graph
+        # strategy-agnostic and the byte source single (repro.dist.compress).
+        meta = {}
+        if strategy.compression != "none":
+            meta = {
+                "compression": strategy.compression,
+                "grad_elems": int(cost.grad_bytes // 4),
+            }
         for s in range(S):
             b.add(
                 f"gradAR{s}", "all-reduce",
                 [f"B{s}.{m}" for m in range(M)],
                 comm_bytes=cost.grad_bytes, group_size=strategy.dp,
                 link_kind="ici", device=f"link:dp{s}",
+                meta=dict(meta),
             )
     return b.build()
+
+
+def moe_a2a_node_meta(
+    moe, n_tokens_local: int, d_model: int, itemsize: int = 4
+) -> dict:
+    """Annotation for an expert-parallel all-to-all node.
+
+    Attach to an ``"all-to-all"`` graph node so the estimator's comm-volume
+    hook prices it with the dispatched-capacity payload the executable
+    ``repro.dist.ep_a2a.moe_ffn_ep_a2a`` actually moves, instead of a dense
+    activation payload.  ``itemsize`` must match the activation compute
+    dtype the executable ships (2 for bf16, 4 for f32).
+    """
+    return {
+        "moe_a2a": {
+            "num_experts": moe.num_experts,
+            "top_k": moe.top_k,
+            "capacity_factor": moe.capacity_factor,
+            "group_size": moe.group_size,
+            "tokens_local": int(n_tokens_local),
+            "d_model": int(d_model),
+            "itemsize": int(itemsize),
+        }
+    }

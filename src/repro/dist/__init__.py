@@ -1,0 +1,26 @@
+"""Executable parallelization primitives (the real side of the sim-vs-real loop).
+
+Three strategy families, each with a byte-accounting twin the simulator
+consumes (see README.md in this package):
+
+  * :mod:`repro.dist.compress` — int8 / top-k gradient compression with
+    error feedback, and ``compressed_psum`` for data-parallel all-reduce.
+  * :mod:`repro.dist.pp`       — shard_map pipeline parallelism
+    (``pipeline_step_shard_map``) over a ``stage`` mesh axis.
+  * :mod:`repro.dist.ep_a2a`   — expert-parallel MoE FFN with explicit
+    all-to-all dispatch (``moe_ffn_ep_a2a``).
+"""
+from repro.dist.compress import (  # noqa: F401
+    compress_with_feedback,
+    compressed_allreduce_bytes,
+    compressed_psum,
+    dequantize_int8,
+    init_compression_state,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.dist.ep_a2a import moe_a2a_bytes, moe_ffn_ep_a2a  # noqa: F401
+from repro.dist.pp import (  # noqa: F401
+    pipeline_step_shard_map,
+    pipeline_transfer_bytes,
+)

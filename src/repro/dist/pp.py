@@ -1,0 +1,121 @@
+"""Pipeline parallelism as a real shard_map program.
+
+``pipeline_step_shard_map`` executes the microbatch schedule that
+``repro.core.strategy.pipeline_graph`` *simulates*: layers are split into
+contiguous stages over a ``stage`` mesh axis, activations move between
+stages with ``ppermute`` (the collective-permute nodes of the simulated
+DAG), and the wavefront runs ``M + S - 1`` ticks.  The forward wavefront is
+schedule-independent (GPipe and 1F1B order forward microbatches
+identically); under ``jax.grad`` XLA derives the backward wavefront, with
+the 1F1B-vs-GPipe distinction living in the simulator's dependency edges
+(`Strategy.schedule`).
+
+``pipeline_transfer_bytes`` is the simulator-facing twin: the exact bytes
+each microbatch moves across each stage boundary — asserted against the
+synthetic DAG's comm volume in ``tests/test_dist_comm.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+
+
+def _stage_apply(params_local, x, layer_fn):
+    """Run this stage's layer slice sequentially (scan over leading dim)."""
+
+    def body(h, p_layer):
+        return layer_fn(p_layer, h), None
+
+    out, _ = jax.lax.scan(body, x, params_local)
+    return out
+
+
+def pipeline_step_shard_map(
+    params,
+    xs: jax.Array,
+    layer_fn,
+    mesh: Mesh,
+    axis_name: str = "stage",
+):
+    """Forward a stack of layers through a ``stage``-sharded pipeline.
+
+    Args:
+      params: pytree whose leaves are stacked per-layer, leading dim L
+        (divisible by the stage count S); sharded over ``axis_name``.
+      xs: microbatched inputs ``(M, batch, d)`` — replicated to every stage.
+      layer_fn: ``(per_layer_params, activation) -> activation``.
+      mesh: mesh containing ``axis_name``.
+
+    Returns the final-stage outputs ``(M, batch, d)``, replicated.  With
+    S == 1 this reduces exactly to a scan over all layers per microbatch.
+    """
+    S = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+    M = xs.shape[0]
+    lead = {int(jnp.shape(leaf)[0]) for leaf in jax.tree_util.tree_leaves(params)}
+    assert len(lead) == 1, f"per-layer leaves disagree on layer count: {lead}"
+    (L,) = lead
+    assert L % S == 0, f"layers {L} % stages {S} != 0"
+
+    perm = [(i, i + 1) for i in range(S - 1)]
+
+    def body(params_local, xs_full):
+        s = jax.lax.axis_index(axis_name)
+        is_first = s == 0
+        is_last = s == S - 1
+        buf = jnp.zeros(xs_full.shape[1:], xs_full.dtype)
+        ys = jnp.zeros_like(xs_full)
+        for t in range(M + S - 1):
+            # stage s works on microbatch m = t - s this tick
+            x_in = jnp.where(is_first, xs_full[min(t, M - 1)], buf)
+            y = _stage_apply(params_local, x_in, layer_fn)
+            m = t - s
+            write = (jnp.arange(M) == m) & is_last & (m >= 0)
+            ys = ys + jnp.where(write[:, None, None], y[None], 0.0)
+            if perm:
+                buf = jax.lax.ppermute(y, axis_name, perm)
+        # only the last stage holds real outputs; psum replicates them
+        return jax.lax.psum(ys, axis_name)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(params, xs)
+
+
+# ---------------------------------------------------------------------------
+# Simulator-facing byte accounting
+# ---------------------------------------------------------------------------
+
+
+def boundary_bytes(activation_shape, dtype=jnp.float32) -> float:
+    """Bytes one microbatch's activation moves across ONE stage boundary."""
+    n = 1
+    for d in activation_shape:
+        n *= int(d)
+    return float(n * jnp.dtype(dtype).itemsize)
+
+
+def pipeline_transfer_bytes(
+    n_stages: int,
+    n_microbatches: int,
+    activation_shape,
+    dtype=jnp.float32,
+    backward: bool = True,
+) -> float:
+    """Total stage-boundary traffic of one pipelined step.
+
+    Forward: every microbatch crosses each of the ``S - 1`` boundaries once
+    (the ppermutes issued by :func:`pipeline_step_shard_map`); the backward
+    wavefront moves the same volume in gradients.  This must equal the sum
+    of ``comm_bytes`` over the collective-permute nodes of
+    ``repro.core.strategy.pipeline_graph`` — tested in test_dist_comm.py.
+    """
+    hop = boundary_bytes(activation_shape, dtype)
+    hops = (n_stages - 1) * n_microbatches
+    return hop * hops * (2 if backward else 1)

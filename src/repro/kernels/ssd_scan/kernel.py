@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 
 def _ssd_kernel(a_ref, x_ref, b_ref, c_ref, dt_ref, y_ref, st_ref, state_scr,
                 *, nchunks: int):
@@ -110,7 +112,7 @@ def ssd_scan_pallas(x, B, C, dt, A, chunk: int, *, interpret: bool = False):
             jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

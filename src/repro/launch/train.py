@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, restore
+from repro.compat import AxisType, make_mesh
 from repro.configs.base import ShapeConfig, get_config, smoke_variant
 from repro.data import make_train_iterator
 from repro.ft import HeartbeatMonitor, StepTimeMonitor, StragglerPolicy
@@ -35,10 +36,42 @@ from repro.train.step import TrainState, init_state
 
 def build_mesh():
     n = jax.device_count()
-    return jax.make_mesh(
+    return make_mesh(
         (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        axis_types=(AxisType.Auto,) * 2,
     )
+
+
+def comm_report(cfg, mesh, params, *, batch: int, seq: int, log_fn=print) -> None:
+    """Log the per-step comm volumes the dist layer would move on this mesh.
+
+    The sim-vs-real loop at a glance: raw vs int8-compressed gradient
+    all-reduce payload (repro.dist.compress) and, for ep_a2a MoE configs,
+    the per-device dispatch all-to-all payload (repro.dist.ep_a2a).
+    """
+    from repro.dist.compress import compressed_allreduce_bytes
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    n_params = sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params)
+    )
+    raw = compressed_allreduce_bytes(n_params, scheme="none")
+    int8 = compressed_allreduce_bytes(n_params)
+    log_fn(
+        f"[comm] dp={dp} grad all-reduce/step: raw {raw / 2**20:.1f} MiB; "
+        f"an int8+feedback ring would move {int8 / 2**20:.1f} MiB "
+        f"({raw / int8:.1f}x less)"
+    )
+    if cfg.moe is not None and cfg.moe.impl == "ep_a2a":
+        from repro.dist.ep_a2a import moe_a2a_bytes
+
+        tokens_local = batch // max(dp, 1) * seq
+        a2a = moe_a2a_bytes(cfg.moe, tokens_local, cfg.d_model)
+        log_fn(
+            f"[comm] moe ep_a2a dispatch/layer: {a2a / 2**20:.2f} MiB "
+            f"per device each way ({tokens_local} local tokens)"
+        )
 
 
 def train(
@@ -69,6 +102,7 @@ def train(
 
     with use_sharding(ctx):
         state, axes = init_state(model, jax.random.PRNGKey(seed), opt)
+        comm_report(cfg, mesh, state.params, batch=batch, seq=seq, log_fn=log_fn)
         start_step = 0
         ckpt = None
         if ckpt_dir:
@@ -144,11 +178,18 @@ def main() -> None:
     ap.add_argument("--d-model", type=int, default=0,
                     help="override d_model (with --smoke)")
     ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--moe-impl", choices=["einsum", "ep_a2a"], default=None,
+                    help="MoE execution strategy (ep_a2a = explicit "
+                         "all-to-all expert parallelism, repro.dist.ep_a2a)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if args.moe_impl and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl=args.moe_impl)
+        )
     if args.d_model:
         cfg = dataclasses.replace(
             cfg, d_model=args.d_model,

@@ -73,12 +73,13 @@ def moe_ffn(p, x, moe: MoEConfig, compute_dtype):
         from repro.models.sharding import current_ctx
 
         ctx = current_ctx()
-        if ctx is not None and "data" in ctx.mesh.axis_names:
-            from repro.dist.ep_a2a import moe_ffn_ep_a2a
+        if ctx is not None:
+            from repro.dist.ep_a2a import ep_a2a_feasible, moe_ffn_ep_a2a
 
-            return moe_ffn_ep_a2a(p, x, moe, compute_dtype, ctx.mesh)
-        # no mesh context (single-device smoke tests): einsum math below is
-        # numerically identical at capacity parity
+            if ep_a2a_feasible(x.shape, moe, ctx.mesh):
+                return moe_ffn_ep_a2a(p, x, moe, compute_dtype, ctx.mesh)
+        # no mesh context (single-device smoke tests) or an EP-infeasible
+        # mesh: einsum math below is numerically identical at capacity parity
     B, S, D = x.shape
     n_tok = B * S
     group = min(moe.group_size, n_tok)

@@ -1,0 +1,212 @@
+"""Deterministic mini property-testing shim used when `hypothesis` is absent.
+
+The property tests (`tests/test_simulator.py`, `tests/test_estimator_db.py`,
+`tests/test_sharding_properties.py`) are written against the real
+`hypothesis` API — declared in the ``test`` extra of ``pyproject.toml`` and
+preferred whenever importable.  On hosts where it cannot be installed this
+module provides just enough of the same API that the suite still *runs* the
+properties (seeded random examples, no shrinking, no example database):
+
+  * ``given`` / ``settings`` decorators (pytest-fixture aware: strategy
+    arguments fill the rightmost test parameters, like hypothesis),
+  * ``strategies``: integers, floats, booleans, sampled_from, lists, tuples,
+    just, one_of, composite.
+
+Examples are generated from ``random.Random(f"{test_name}:{index}")`` so a
+failure reproduces exactly across runs and machines.  Install via
+:func:`install` (done by ``tests/conftest.py`` on ImportError) — it
+registers this module as ``sys.modules["hypothesis"]``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+_UNIQUE_RETRY_FACTOR = 50
+
+
+class SearchStrategy:
+    """A generator of example values: ``example(rng) -> value``."""
+
+    def __init__(self, gen, label: str = "strategy"):
+        self._gen = gen
+        self._label = label
+
+    def example(self, rng: random.Random):
+        return self._gen(rng)
+
+    def __repr__(self) -> str:
+        return f"<{self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda r: r.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(
+    min_value: float,
+    max_value: float,
+    *,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+) -> SearchStrategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite here
+    return SearchStrategy(
+        lambda r: r.uniform(min_value, max_value),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda r: value, f"just({value!r})")
+
+
+def none() -> SearchStrategy:
+    return SearchStrategy(lambda r: None, "none()")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(lambda r: r.choice(pool), "sampled_from")
+
+
+def one_of(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.choice(strats).example(r), "one_of")
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda r: tuple(s.example(r) for s in strats), "tuples"
+    )
+
+
+def lists(
+    elements: SearchStrategy,
+    *,
+    min_size: int = 0,
+    max_size: int | None = None,
+    unique: bool = False,
+) -> SearchStrategy:
+    def gen(r: random.Random):
+        hi = max_size if max_size is not None else min_size + 10
+        n = r.randint(min_size, hi)
+        if not unique:
+            return [elements.example(r) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(n * _UNIQUE_RETRY_FACTOR):
+            if len(out) == n:
+                break
+            v = elements.example(r)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        if len(out) < n:
+            raise ValueError(
+                f"could not draw {n} unique values from {elements!r}"
+            )
+        return out
+
+    return SearchStrategy(gen, "lists")
+
+
+def composite(fn):
+    """``@st.composite``: ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def gen(r: random.Random):
+            return fn(lambda s: s.example(r), *args, **kwargs)
+
+        return SearchStrategy(gen, f"composite:{fn.__name__}")
+
+    return factory
+
+
+class settings:
+    """Subset of ``hypothesis.settings``: max_examples is honored, the rest
+    (deadline, phases, ...) accepted and ignored."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats: SearchStrategy):
+    """Run the test once per generated example (no shrinking).
+
+    Like hypothesis, strategies bind to the *rightmost* parameters of the
+    test function; any leading parameters stay visible to pytest as
+    fixtures via an explicit ``__signature__``.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        assert len(params) >= len(strats), (
+            f"{fn.__name__} has {len(params)} params for {len(strats)} strategies"
+        )
+        fixture_params = params[: len(params) - len(strats)]
+        strat_names = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                values = [s.example(rng) for s in strats]
+                try:
+                    fn(*fixture_args, **fixture_kwargs,
+                       **dict(zip(strat_names, values)))
+                except Exception:
+                    print(
+                        f"[hypothesis-fallback] falsifying example #{i} "
+                        f"of {fn.__name__}: {values!r}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        return wrapper
+
+    return deco
+
+
+def _build_strategies_module() -> types.ModuleType:
+    st = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers", "floats", "booleans", "just", "none", "sampled_from", "one_of",
+        "tuples", "lists", "composite", "SearchStrategy",
+    ):
+        setattr(st, name, globals()[name])
+    return st
+
+
+strategies = _build_strategies_module()
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (no-op if the real one is
+    importable or a fallback is already installed)."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__doc__ = __doc__
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

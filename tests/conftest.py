@@ -8,6 +8,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import repro.compat  # noqa: F401  (installs jax version-drift shims)
+
+try:
+    import hypothesis  # noqa: F401  (real library preferred when installed)
+except ImportError:
+    from repro.testing import hypothesis_fallback
+
+    hypothesis_fallback.install()
+
 import numpy as np
 import pytest
 
