@@ -14,9 +14,17 @@ the CPU backend:
      signatures online (the paper's fallback) and re-simulate;
   4. measure the real jitted step wall time and report % error for both
      passes.
+
+Beyond the paper's table, ``schedule_rows`` cross-checks the pipeline
+schedule layer: for gpipe / 1f1b / interleaved-1f1b the DES makespan and
+bubble must match the schedule's own tick-table accounting (the executor
+twin) and the analytic ``2Mv + 2(S-1)`` closed form.  ``--smoke`` runs only
+these rows (no jit, sub-second) so CI can gate on schedule-accuracy
+regressions.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
@@ -45,6 +53,58 @@ def _models():
     cfg, _ = variant("qwen3-moe-235b-a22b")
     out["moe_qwen3"] = (cfg, shape)
     return out
+
+
+def schedule_rows() -> list[dict]:
+    """Schedule-layer accuracy: DES vs tick-table twin vs analytic form.
+
+    Any drift between the simulated pipeline timeline and the executable
+    schedule's own accounting is a sim-vs-real accuracy regression, caught
+    here as a nonzero err column.  Raises on mismatch so CI fails loudly.
+    """
+    from repro.core.simulator import simulate
+    from repro.core.strategy import LayerCost, Strategy, pipeline_graph
+    from repro.dist.schedules import make_schedule
+
+    rows = []
+    for name, S, M, v in (
+        ("gpipe", 4, 8, 1),
+        ("1f1b", 4, 8, 1),
+        ("interleaved_1f1b", 4, 8, 2),
+    ):
+        sch = make_schedule(name, S, M, v)
+        strategy = Strategy(pp=S, microbatches=M, schedule=name, vstages=v)
+        g = pipeline_graph(
+            S * v,
+            LayerCost(fwd_flops=1.0, fwd_bytes=0.0, bwd_multiplier=1.0),
+            strategy,
+        )
+        res = simulate(g, lambda n: 1.0 if n.kind in ("fwd", "bwd") else 0.0)
+        ticks = sch.total_ticks()
+        analytic = 2 * M * v + 2 * (S - 1)
+        err_twin = abs(res.makespan - ticks) / ticks
+        err_analytic = abs(res.makespan - analytic) / analytic
+        bubble = res.makespan - max(
+            t for d, t in res.device_busy.items() if d.startswith("stage")
+        )
+        if err_twin > 1e-9 or bubble != sch.bubble_ticks(0):
+            raise AssertionError(
+                f"schedule accuracy regression: {name} sim {res.makespan} "
+                f"vs twin {ticks} (bubble {bubble} vs {sch.bubble_ticks(0)})"
+            )
+        rows.append(
+            {
+                "name": f"schedule_{name}",
+                "us_per_call": res.makespan,
+                "derived": (
+                    f"ticks={ticks};analytic={analytic};"
+                    f"err_twin={err_twin * 100:.2f}%;"
+                    f"err_analytic={err_analytic * 100:.2f}%;"
+                    f"bubble_ticks={bubble:.0f}"
+                ),
+            }
+        )
+    return rows
 
 
 def run(steps: int = 12, profile_repeats: int = 5) -> list[dict]:
@@ -134,9 +194,16 @@ def run(steps: int = 12, profile_repeats: int = 5) -> list[dict]:
                 ),
             }
         )
+    rows.extend(schedule_rows())
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="schedule-accuracy rows only (fast, no jit; the CI gate)",
+    )
+    args = ap.parse_args()
+    for r in schedule_rows() if args.smoke else run():
         print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate: collection must be clean and the fast suite green.
 # The slow subprocess tier (forced multi-device hosts) runs with: check.sh slow
+# Docs job (markdown links + schedule-accuracy smoke) runs with: check.sh docs
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -8,6 +9,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "slow" ]]; then
     exec python -m pytest -q -m slow
+fi
+
+if [[ "${1:-}" == "docs" ]]; then
+    # markdown link integrity + the schedule-accuracy smoke rows
+    python scripts/check_docs.py
+    exec python benchmarks/bench_sim_accuracy.py --smoke
 fi
 
 # fail fast on import-error walls before running anything

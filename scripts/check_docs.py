@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Markdown link check for the docs set (no network, stdlib only).
+
+Validates every inline link/image in README.md, ROADMAP.md, PAPER.md,
+PAPERS.md, CHANGES.md, docs/**.md, and the per-package READMEs:
+
+  * relative links must resolve to an existing file or directory;
+  * fragment-only or relative #fragments must point at a heading that
+    exists in the target file (GitHub anchor style);
+  * http(s) links are syntax-checked only (scheme + host) — CI has no
+    network.
+
+Exit code 1 with a per-link report on any failure; run via
+``scripts/check.sh docs``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from urllib.parse import urlparse
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOC_GLOBS = [
+    "README.md",
+    "ROADMAP.md",
+    "PAPER.md",
+    "PAPERS.md",
+    "CHANGES.md",
+    "ISSUE.md",
+    "SNIPPETS.md",
+    "docs",
+    "src/repro/dist/README.md",
+]
+
+# [text](target) — excluding images' leading ! is irrelevant for checking
+_LINK = re.compile(r"\[([^\]]*)\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def doc_files() -> list[str]:
+    out = []
+    for entry in DOC_GLOBS:
+        path = os.path.join(REPO, entry)
+        if os.path.isdir(path):
+            for root, _, files in os.walk(path):
+                out.extend(
+                    os.path.join(root, f) for f in files if f.endswith(".md")
+                )
+        elif os.path.exists(path):
+            out.append(path)
+    return sorted(out)
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (approximation: good enough here)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_~]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    out = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if _CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if not in_fence and line.startswith("#"):
+                out.add(github_anchor(line.lstrip("#")))
+    return out
+
+
+def iter_links(path: str):
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if _CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                yield lineno, m.group(1), m.group(2)
+
+
+def check_link(src: str, target: str) -> str | None:
+    """Returns an error string, or None if the link is fine."""
+    if target.startswith(("http://", "https://")):
+        parsed = urlparse(target)
+        if not parsed.netloc:
+            return f"malformed URL {target!r}"
+        return None
+    if target.startswith("mailto:"):
+        return None
+    path_part, _, fragment = target.partition("#")
+    base = (
+        os.path.join(REPO, path_part.lstrip("/"))
+        if path_part.startswith("/")
+        else os.path.normpath(os.path.join(os.path.dirname(src), path_part))
+        if path_part
+        else src
+    )
+    if not os.path.exists(base):
+        return f"broken path {target!r} (resolved {os.path.relpath(base, REPO)})"
+    if fragment and os.path.isfile(base) and base.endswith(".md"):
+        if github_anchor(fragment) not in anchors_of(base):
+            return f"missing anchor #{fragment} in {os.path.relpath(base, REPO)}"
+    return None
+
+
+def main() -> int:
+    errors = []
+    n_links = 0
+    files = doc_files()
+    for src in files:
+        for lineno, text, target in iter_links(src):
+            n_links += 1
+            err = check_link(src, target)
+            if err:
+                errors.append(
+                    f"{os.path.relpath(src, REPO)}:{lineno}: [{text}] {err}"
+                )
+    print(f"checked {n_links} links across {len(files)} markdown files")
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -79,7 +79,10 @@ class Autotuner:
     # -- candidate enumeration --------------------------------------------------
 
     def candidates(
-        self, max_pp: int = 16, microbatch_options=(1, 2, 4, 8, 16, 32)
+        self,
+        max_pp: int = 16,
+        microbatch_options=(1, 2, 4, 8, 16, 32),
+        vstage_options=(2,),
     ) -> list[Strategy]:
         out = []
         L = self.cfg.num_layers
@@ -97,11 +100,20 @@ class Autotuner:
                     per_dp = self.global_batch // dp
                     if per_dp % mb != 0:
                         continue
-                    for sched in ("gpipe", "1f1b") if pp > 1 else ("1f1b",):
+                    scheds = [("1f1b", 1)]
+                    if pp > 1:
+                        scheds.insert(0, ("gpipe", 1))
+                        # interleaved-1F1B: v model chunks per device need
+                        # L % (pp*v) == 0 and the Megatron microbatch
+                        # grouping needs mb % pp == 0
+                        for v in vstage_options:
+                            if v > 1 and L % (pp * v) == 0 and mb % pp == 0:
+                                scheds.append(("interleaved_1f1b", v))
+                    for sched, v in scheds:
                         out.append(
                             Strategy(
                                 dp=dp, tp=tp, pp=pp,
-                                microbatches=mb, schedule=sched,
+                                microbatches=mb, schedule=sched, vstages=v,
                             )
                         )
         return out

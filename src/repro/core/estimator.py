@@ -150,8 +150,10 @@ def dist_comm_bytes(node: OpNode) -> float:
     ``{"compression": scheme, "grad_elems": n}`` on a compressed gradient
     all-reduce (see ``repro.core.strategy.pipeline_graph``), or
     ``{"moe_a2a": {...}}`` on an expert-parallel all-to-all (see
-    ``repro.core.strategy.moe_a2a_node_meta``).  Unannotated nodes pass
-    through unchanged, so estimators stay backward-compatible.
+    ``repro.core.strategy.moe_a2a_node_meta``).  Unannotated nodes — e.g.
+    pipeline boundary sends, whose ``comm_bytes`` already equal the exact
+    per-hop payload the scheduled executor ppermutes — pass through
+    unchanged, so estimators stay backward-compatible.
     """
     scheme = node.meta.get("compression")
     if scheme and scheme != "none":

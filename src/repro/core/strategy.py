@@ -6,9 +6,18 @@ data parallelism, and the pipelining setting for model parallelism which may
 not be available in the dataflow graph."
 
 :class:`Strategy` is that config.  :func:`pipeline_graph` materializes a
-pipeline-parallel training step (GPipe or 1F1B) as a DataflowGraph with
-per-stage device placements — the heterogeneous-placement case of the
-simulator, and the substrate the autotuner searches over.
+pipeline-parallel training step (GPipe, 1F1B, or interleaved-1F1B) as a
+DataflowGraph with per-stage device placements — the heterogeneous-placement
+case of the simulator, and the substrate the autotuner searches over.
+
+The schedule itself is NOT hand-rolled here: the graph is built from the
+same ``repro.dist.schedules`` step table that
+``repro.dist.pp.pipeline_schedule_shard_map`` executes for real.  Each
+table entry becomes an F/B node placed on its ``stage{s}`` device, data
+dependencies come from ``PipelineSchedule.data_deps``, and per-device
+serialization edges pin the simulated order to the table order — so the
+DES timeline and the shard_map executor realize the identical schedule
+(asserted in tests/test_schedule_parity.py).
 """
 from __future__ import annotations
 
@@ -25,7 +34,8 @@ class Strategy:
     pp: int = 1                 # pipeline stages
     ep: int = 1                 # expert-parallel width
     microbatches: int = 1
-    schedule: str = "1f1b"      # "gpipe" | "1f1b"
+    schedule: str = "1f1b"      # "gpipe" | "1f1b" | "interleaved_1f1b"
+    vstages: int = 1            # virtual stages (model chunks) per device
     remat: str = "dots"
     zero1: bool = False
     # gradient-compression scheme applied to the dp all-reduce: "none",
@@ -39,9 +49,18 @@ class Strategy:
 
     def describe(self) -> str:
         tag = "" if self.compression == "none" else f",{self.compression}"
+        sched = self.schedule + (f"v{self.vstages}" if self.vstages > 1 else "")
         return (
             f"dp{self.dp}xtp{self.tp}xpp{self.pp}"
-            f"(ep{self.ep},mb{self.microbatches},{self.schedule}{tag})"
+            f"(ep{self.ep},mb{self.microbatches},{sched}{tag})"
+        )
+
+    def make_pipeline_schedule(self):
+        """The shared step table this strategy simulates AND executes."""
+        from repro.dist.schedules import make_schedule
+
+        return make_schedule(
+            self.schedule, self.pp, self.microbatches, self.vstages
         )
 
 
@@ -105,63 +124,78 @@ def pipeline_graph(
 ) -> DataflowGraph:
     """Build the fwd/bwd microbatch DAG for a pipeline-parallel step.
 
-    Nodes: F(s,m) and B(s,m) on device "stage{s}"; stage-boundary sends on
-    "link:pp"; the closing gradient all-reduce per stage on "link:dp{s}".
-    Dependencies encode the schedule:
-      * GPipe: B(s,m) additionally depends on F(s, M-1) (full flush).
-      * 1F1B:  F(s,m) depends on B(s, m - (S - s)) — at most (S - s)
-        microbatches in flight per stage (the classic memory window).
+    The DAG is the strategy's :class:`repro.dist.schedules.PipelineSchedule`
+    step table made explicit: one F/B node per table entry on device
+    ``stage{k % S}`` (``k`` the virtual stage), virtual-stage-boundary sends
+    on "link:pp", and the closing gradient all-reduce per device on
+    "link:dp{s}".  Two kinds of edges realize the table:
+
+      * data edges — ``PipelineSchedule.data_deps`` (activations forward,
+        cotangents backward, routed through the send nodes);
+      * serialization edges — each step depends on the previous step of the
+        same device, pinning the simulated per-device order to the exact
+        table order the executor runs.
+
+    GPipe's flush, 1F1B's ``S - s`` in-flight window, and interleaving all
+    emerge from the table rather than from schedule-specific dependency
+    arithmetic.
     """
-    S, M = strategy.pp, strategy.microbatches
-    assert n_layers % S == 0, f"layers {n_layers} % stages {S} != 0"
-    per_stage = n_layers // S
+    from repro.dist.schedules import FWD
+
+    schedule = strategy.make_pipeline_schedule()
+    schedule.validate()
+    S, M, V = schedule.n_stages, schedule.n_microbatches, schedule.n_vstages
+    assert n_layers % V == 0, (
+        f"layers {n_layers} % virtual stages {V} != 0"
+    )
+    per_vstage = n_layers // V
     b = GraphBuilder(f"pipeline_{strategy.describe()}")
 
-    fwd_flops = cost.fwd_flops * per_stage
-    fwd_bytes = cost.fwd_bytes * per_stage
+    fwd_flops = cost.fwd_flops * per_vstage
+    fwd_bytes = cost.fwd_bytes * per_vstage
     bwd_flops = fwd_flops * cost.bwd_multiplier
     bwd_bytes = fwd_bytes * cost.bwd_multiplier
+    # boundary sends carry the exact per-hop payload the executor ppermutes;
+    # no meta annotation needed — dist_comm_bytes passes comm_bytes through,
+    # and parity with the schedule/executor twins is asserted in
+    # tests/test_schedule_parity.py
+    hop_meta = {"transfer": "pp_boundary"}
 
-    for m in range(M):
-        for s in range(S):
-            deps = []
-            if s > 0:
-                deps.append(f"sendF{s-1}.{m}")
-            if strategy.schedule == "1f1b":
-                prev = m - (S - s)
-                if prev >= 0:
-                    deps.append(f"B{s}.{prev}")
+    prev_on_device: dict[int, str] = {}
+    for step in schedule.steps():
+        k, m, s = step.vstage, step.microbatch, step.stage
+        deps = []
+        if step.phase == FWD:
+            if k > 0:
+                deps.append(f"sendF{k - 1}.{m}")
+        else:
+            deps.append(f"F{k}.{m}")
+            if k < V - 1:
+                deps.append(f"sendB{k + 1}.{m}")
+        if s in prev_on_device:
+            deps.append(prev_on_device[s])
+        kind = "fwd" if step.phase == FWD else "bwd"
+        b.add(
+            step.name, kind, deps,
+            flops=fwd_flops if step.phase == FWD else bwd_flops,
+            in_bytes=fwd_bytes if step.phase == FWD else bwd_bytes,
+            device=f"stage{s}",
+        )
+        prev_on_device[s] = step.name
+        if step.phase == FWD and k < V - 1:
             b.add(
-                f"F{s}.{m}", "fwd", deps,
-                flops=fwd_flops, in_bytes=fwd_bytes,
-                device=f"stage{s}",
+                f"sendF{k}.{m}", "collective-permute", [step.name],
+                comm_bytes=cost.boundary_bytes, group_size=2,
+                link_kind="ici", device="link:pp",
+                meta=dict(hop_meta),
             )
-            if s < S - 1:
-                b.add(
-                    f"sendF{s}.{m}", "collective-permute", [f"F{s}.{m}"],
-                    comm_bytes=cost.boundary_bytes, group_size=2,
-                    link_kind="ici", device="link:pp",
-                    meta={"transfer": "pp_boundary"},
-                )
-    for m in range(M):
-        for s in reversed(range(S)):
-            deps = [f"F{s}.{m}"]
-            if s < S - 1:
-                deps.append(f"sendB{s+1}.{m}")
-            if strategy.schedule == "gpipe":
-                deps.append(f"F{s}.{M-1}")
+        elif step.phase != FWD and k > 0:
             b.add(
-                f"B{s}.{m}", "bwd", deps,
-                flops=bwd_flops, in_bytes=bwd_bytes,
-                device=f"stage{s}",
+                f"sendB{k}.{m}", "collective-permute", [step.name],
+                comm_bytes=cost.boundary_bytes, group_size=2,
+                link_kind="ici", device="link:pp",
+                meta=dict(hop_meta),
             )
-            if s > 0:
-                b.add(
-                    f"sendB{s}.{m}", "collective-permute", [f"B{s}.{m}"],
-                    comm_bytes=cost.boundary_bytes, group_size=2,
-                    link_kind="ici", device="link:pp",
-                    meta={"transfer": "pp_boundary"},
-                )
     if strategy.dp > 1 and cost.grad_bytes > 0:
         # comm_bytes stays the RAW f32 payload; the compression annotation is
         # resolved to the dist layer's actual wire bytes at estimation time
@@ -176,7 +210,7 @@ def pipeline_graph(
         for s in range(S):
             b.add(
                 f"gradAR{s}", "all-reduce",
-                [f"B{s}.{m}" for m in range(M)],
+                [f"B{k}.{m}" for k in range(s, V, S) for m in range(M)],
                 comm_bytes=cost.grad_bytes, group_size=strategy.dp,
                 link_kind="ici", device=f"link:dp{s}",
                 meta=dict(meta),

@@ -1,4 +1,13 @@
-"""Chrome-trace export of simulated timelines (viewable in perfetto/chrome)."""
+"""Chrome-trace export of simulated timelines (viewable in perfetto/chrome).
+
+Each simulated device becomes its own trace *process* (pid) with a
+``process_name`` metadata record, so heterogeneous timelines — pipeline
+stages, per-stage dp links, the pp boundary link — render as separately
+labeled swimlanes instead of anonymous tids under one process.  Pids are
+ordered compute-devices-first (``chip``, ``stage0``, ``stage1``, ...), then
+links, matching how you read a pipeline trace top-to-bottom; see
+docs/timelines.md for a walkthrough.
+"""
 from __future__ import annotations
 
 import json
@@ -6,9 +15,23 @@ import json
 from repro.core.simulator import SimResult
 
 
+def _device_sort_key(device: str) -> tuple:
+    """chip first, then stages by number, then links alphabetically."""
+    if device == "chip":
+        return (0, 0, device)
+    if device.startswith("stage"):
+        try:
+            return (1, int(device[len("stage"):]), device)
+        except ValueError:
+            return (1, 0, device)
+    if device.startswith("link"):
+        return (2, 0, device)
+    return (3, 0, device)
+
+
 def to_chrome_trace(result: SimResult, path: str | None = None) -> dict:
-    devices = sorted({e.device for e in result.events})
-    tid = {d: i for i, d in enumerate(devices)}
+    devices = sorted({e.device for e in result.events}, key=_device_sort_key)
+    pid = {d: i for i, d in enumerate(devices)}
     events = []
     for e in result.events:
         events.append(
@@ -18,17 +41,36 @@ def to_chrome_trace(result: SimResult, path: str | None = None) -> dict:
                 "ph": "X",
                 "ts": e.start * 1e6,
                 "dur": (e.end - e.start) * 1e6,
-                "pid": 0,
-                "tid": tid[e.device],
+                "pid": pid[e.device],
+                "tid": 0,
             }
         )
-    for d, t in tid.items():
+    for d, p in pid.items():
+        events.append(
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": p,
+                "tid": 0,
+                "args": {"name": d},
+            }
+        )
+        events.append(
+            {
+                "name": "process_sort_index",
+                "ph": "M",
+                "pid": p,
+                "tid": 0,
+                "args": {"sort_index": p, "name": d},
+            }
+        )
+        # thread_name kept for viewers that group by tid within a process
         events.append(
             {
                 "name": "thread_name",
                 "ph": "M",
-                "pid": 0,
-                "tid": t,
+                "pid": p,
+                "tid": 0,
                 "args": {"name": d},
             }
         )

@@ -9,6 +9,13 @@ consumes (see README.md in this package):
     (``pipeline_step_shard_map``) over a ``stage`` mesh axis.
   * :mod:`repro.dist.ep_a2a`   — expert-parallel MoE FFN with explicit
     all-to-all dispatch (``moe_ffn_ep_a2a``).
+
+plus the schedule layer both sides of the sim-vs-real loop share:
+
+  * :mod:`repro.dist.schedules` — GPipe / 1F1B / interleaved-1F1B as
+    explicit (stage, microbatch, phase) step tables; the simulator's
+    ``pipeline_graph`` and the executor's ``pipeline_schedule_shard_map``
+    consume the same table.
 """
 from repro.dist.compress import (  # noqa: F401
     compress_with_feedback,
@@ -21,6 +28,18 @@ from repro.dist.compress import (  # noqa: F401
 )
 from repro.dist.ep_a2a import moe_a2a_bytes, moe_ffn_ep_a2a  # noqa: F401
 from repro.dist.pp import (  # noqa: F401
+    pipeline_schedule_shard_map,
     pipeline_step_shard_map,
     pipeline_transfer_bytes,
+    schedule_transfer_bytes,
+)
+from repro.dist.schedules import (  # noqa: F401
+    ExecutorPlan,
+    GPipeSchedule,
+    InterleavedOneFOneBSchedule,
+    OneFOneBSchedule,
+    PipelineSchedule,
+    Step,
+    build_executor_plan,
+    make_schedule,
 )

@@ -1,18 +1,29 @@
 """Pipeline parallelism as a real shard_map program.
 
-``pipeline_step_shard_map`` executes the microbatch schedule that
-``repro.core.strategy.pipeline_graph`` *simulates*: layers are split into
-contiguous stages over a ``stage`` mesh axis, activations move between
-stages with ``ppermute`` (the collective-permute nodes of the simulated
-DAG), and the wavefront runs ``M + S - 1`` ticks.  The forward wavefront is
-schedule-independent (GPipe and 1F1B order forward microbatches
-identically); under ``jax.grad`` XLA derives the backward wavefront, with
-the 1F1B-vs-GPipe distinction living in the simulator's dependency edges
-(`Strategy.schedule`).
+Two executors share one schedule source (``repro.dist.schedules``):
 
-``pipeline_transfer_bytes`` is the simulator-facing twin: the exact bytes
-each microbatch moves across each stage boundary — asserted against the
-synthetic DAG's comm volume in ``tests/test_dist_comm.py``.
+``pipeline_schedule_shard_map`` — the scheduled executor.  It runs the
+*same* (stage, microbatch, phase) step table the simulator's
+``repro.core.strategy.pipeline_graph`` turns into a DataflowGraph: one tick
+per table row, ``lax.switch`` dispatching each device's fwd/bwd step, with
+explicit scheduled backward passes (per-chunk ``jax.vjp``) and ppermute
+activation/cotangent exchanges at every virtual-stage boundary.  GPipe,
+1F1B, and interleaved-1F1B all execute through it, v chunks per device and
+all.
+
+``pipeline_step_shard_map`` — the original forward wavefront (backward via
+autodiff), kept as the cheap path when only outputs are needed; its forward
+microbatch order coincides with every supported schedule's.
+
+Byte-accounting twins: ``boundary_bytes`` / ``pipeline_transfer_bytes``
+(v=1 wavefront) and ``schedules.PipelineSchedule.comm_bytes`` /
+``ExecutorPlan.comm_bytes`` (scheduled path) give the exact bytes each
+table moves — asserted against the synthetic DAG's comm volume in
+``tests/test_dist_comm.py`` and ``tests/test_schedule_parity.py``.  Like
+``compress.compressed_psum``, the SPMD realization ships a fixed-size
+buffer through ppermute every tick; the accounting twin counts the
+*scheduled* hops, which is what a production point-to-point transport would
+put on the wire.
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.dist.schedules import PipelineSchedule, build_executor_plan
 
 
 def _stage_apply(params_local, x, layer_fn):
@@ -89,6 +101,213 @@ def pipeline_step_shard_map(
 
 
 # ---------------------------------------------------------------------------
+# Scheduled executor: fwd AND bwd driven by the shared step table
+# ---------------------------------------------------------------------------
+
+
+def _device_major(leaf, n_stages: int, vstages: int):
+    """(L, ...) layer stack -> (S*v, L/(S*v), ...) with device-major rows.
+
+    Row ``s*v + c`` holds the contiguous layer block of virtual stage
+    ``k = s + c*S`` — so shard_map's ``P(stage)`` split hands device ``s``
+    exactly its ``v`` chunks, in local-chunk order.
+    """
+    L = int(jnp.shape(leaf)[0])
+    V = n_stages * vstages
+    per_chunk = L // V
+    resh = jnp.reshape(leaf, (vstages, n_stages, per_chunk) + leaf.shape[1:])
+    return jnp.reshape(
+        jnp.moveaxis(resh, 0, 1), (V, per_chunk) + leaf.shape[1:]
+    )
+
+
+def _layer_major(leaf, n_stages: int, vstages: int):
+    """Inverse of :func:`_device_major`: (S*v, Lc, ...) -> (L, ...)."""
+    V = n_stages * vstages
+    per_chunk = int(jnp.shape(leaf)[1])
+    resh = jnp.reshape(
+        leaf, (n_stages, vstages, per_chunk) + leaf.shape[2:]
+    )
+    return jnp.reshape(
+        jnp.moveaxis(resh, 0, 1), (V * per_chunk,) + leaf.shape[2:]
+    )
+
+
+def arrange_params_for_schedule(params, schedule: PipelineSchedule):
+    """Reorder a stacked-layer pytree into the executor's device-major rows."""
+    return jax.tree_util.tree_map(
+        lambda p: _device_major(p, schedule.n_stages, schedule.vstages), params
+    )
+
+
+def unarrange_params_for_schedule(tree, schedule: PipelineSchedule):
+    """Map executor-layout leaves (e.g. grads) back to layer-major (L, ...)."""
+    return jax.tree_util.tree_map(
+        lambda p: _layer_major(p, schedule.n_stages, schedule.vstages), tree
+    )
+
+
+def pipeline_schedule_shard_map(
+    params,
+    xs: jax.Array,
+    layer_fn,
+    mesh: Mesh,
+    schedule: PipelineSchedule,
+    loss_fn=None,
+    axis_name: str = "stage",
+):
+    """Execute a pipeline step table — forward and scheduled backward.
+
+    One tick per row of the schedule's :class:`ExecutorPlan`: each device
+    receives this tick's ppermuted activation/cotangent (scattered into its
+    per-(chunk, microbatch) tables), then ``lax.switch``es on its scheduled
+    action — a chunk forward (``_stage_apply``) or an explicit chunk
+    backward (``jax.vjp`` at the stored input activation), exactly the
+    F/B nodes the simulator times for the same schedule.
+
+    Args:
+      params: pytree of per-layer stacked leaves, leading dim L divisible by
+        ``S * v``; layer-major (the natural model layout).
+      xs: microbatched inputs ``(M, batch, d)``, replicated.
+      layer_fn: ``(per_layer_params, activation) -> activation``.
+      mesh: mesh containing ``axis_name`` of size ``schedule.n_stages``.
+      schedule: a validated :class:`PipelineSchedule`.
+      loss_fn: scalar per-microbatch loss on the final-stage output; the
+        backward of the last virtual stage is seeded with its vjp.  Default
+        ``0.5 * sum(y**2)`` (cotangent ``y``).
+
+    Returns ``(loss, outs, grads)``: summed microbatch loss, final-stage
+    outputs ``(M, batch, d)`` (replicated), and parameter gradients in the
+    original layer-major layout.
+    """
+    S = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+    assert S == schedule.n_stages, (S, schedule.n_stages)
+    M, v, V = schedule.n_microbatches, schedule.vstages, schedule.n_vstages
+    assert xs.shape[0] == M, (xs.shape, M)
+    lead = {int(jnp.shape(p)[0]) for p in jax.tree_util.tree_leaves(params)}
+    assert len(lead) == 1, f"per-layer leaves disagree on layer count: {lead}"
+    (L,) = lead
+    assert L % V == 0, f"layers {L} % virtual stages {V} != 0"
+    if loss_fn is None:
+        loss_fn = lambda y: 0.5 * jnp.sum(y * y)  # noqa: E731
+
+    plan = build_executor_plan(schedule)
+    # dense [n_ticks][n_stages] int tables -> scanned tick-wise, so the
+    # traced program is O(1) in tick count (one switch body, not T of them)
+    rows = {
+        "act": jnp.asarray(plan.action),
+        "chunk": jnp.asarray(plan.chunk),
+        "mb": jnp.asarray(plan.microbatch),
+        "last": jnp.asarray(plan.is_last),
+        "rfv": jnp.asarray(plan.recv_fwd_valid),
+        "rfc": jnp.asarray(plan.recv_fwd_chunk),
+        "rfm": jnp.asarray(plan.recv_fwd_mb),
+        "rbv": jnp.asarray(plan.recv_bwd_valid),
+        "rbc": jnp.asarray(plan.recv_bwd_chunk),
+        "rbm": jnp.asarray(plan.recv_bwd_mb),
+    }
+
+    perm_f = [(i, (i + 1) % S) for i in range(S)]
+    perm_b = [(i, (i - 1) % S) for i in range(S)]
+
+    def chunk_apply(p_local, c, x):
+        p_c = jax.tree_util.tree_map(lambda leaf: leaf[c], p_local)
+        return _stage_apply(p_c, x, layer_fn)
+
+    def body(params_local, xs_full):
+        s = jax.lax.axis_index(axis_name)
+        mb_shape = xs_full.shape[1:]
+        x_in = jnp.zeros((v, M) + mb_shape, xs_full.dtype)
+        # virtual stage 0 = (device 0, chunk 0): its inputs are the data
+        x_in = x_in.at[0].set(jnp.where(s == 0, xs_full, 0.0))
+        g_in = jnp.zeros_like(x_in)
+        outs = jnp.zeros_like(xs_full)
+        gparams = jax.tree_util.tree_map(jnp.zeros_like, params_local)
+        loss = jnp.zeros((), jnp.float32)
+        fwd_snd = jnp.zeros(mb_shape, xs_full.dtype)
+        bwd_snd = jnp.zeros(mb_shape, xs_full.dtype)
+
+        def tick(carry, row):
+            x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd = carry
+            # 1. exchange: every tick ships both registers; the static plan
+            # says whether this device's arrivals mean anything
+            inc_f = jax.lax.ppermute(fwd_snd, axis_name, perm_f)
+            inc_b = jax.lax.ppermute(bwd_snd, axis_name, perm_b)
+            rc, rm = row["rfc"][s], row["rfm"][s]
+            x_in = x_in.at[rc, rm].set(
+                jnp.where(row["rfv"][s] > 0, inc_f, x_in[rc, rm])
+            )
+            rc, rm = row["rbc"][s], row["rbm"][s]
+            g_in = g_in.at[rc, rm].set(
+                jnp.where(row["rbv"][s] > 0, inc_b, g_in[rc, rm])
+            )
+
+            # 2. execute this device's scheduled step
+            c, m = row["chunk"][s], row["mb"][s]
+            is_last = row["last"][s] > 0
+            op = (x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd,
+                  c, m, is_last)
+
+            def do_noop(op):
+                return op[:7]
+
+            def do_fwd(op):
+                x_in, g_in, outs, gparams, loss, _, bwd_snd, c, m, is_last = op
+                y = chunk_apply(params_local, c, x_in[c, m])
+                outs = outs.at[m].set(jnp.where(is_last, y, outs[m]))
+                return (x_in, g_in, outs, gparams, loss, y, bwd_snd)
+
+            def bwd_step(op, cotangent_of):
+                x_in, g_in, outs, gparams, loss, fwd_snd, _, c, m, _l = op
+                y, vjp_fn = jax.vjp(
+                    lambda p, x: chunk_apply(p, c, x), params_local, x_in[c, m]
+                )
+                g, dloss = cotangent_of(y, g_in[c, m])
+                dparams, dx = vjp_fn(g)
+                gparams = jax.tree_util.tree_map(jnp.add, gparams, dparams)
+                return (x_in, g_in, outs, gparams, loss + dloss, fwd_snd, dx)
+
+            def do_bwd(op):
+                # interior virtual stage: cotangent arrived over the wire
+                return bwd_step(op, lambda y, g_recv: (g_recv, 0.0))
+
+            def do_bwd_last(op):
+                # loss boundary: seed the cotangent from loss_fn's vjp —
+                # only this branch ever pays the loss evaluation
+                def seed(y, g_recv):
+                    lval, lvjp = jax.vjp(loss_fn, y)
+                    return (
+                        lvjp(jnp.ones_like(lval))[0],
+                        lval.astype(jnp.float32),
+                    )
+
+                return bwd_step(op, seed)
+
+            carry = jax.lax.switch(
+                row["act"][s], (do_noop, do_fwd, do_bwd, do_bwd_last), op
+            )
+            return carry, None
+
+        carry = (x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd)
+        carry, _ = jax.lax.scan(tick, carry, rows)
+        x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd = carry
+
+        # outs/loss are real only on the device owning the last virtual
+        # stage (always rank S-1); psum replicates them
+        return jax.lax.psum(loss, axis_name), jax.lax.psum(outs, axis_name), gparams
+
+    arranged = arrange_params_for_schedule(params, schedule)
+    loss, outs, gparams = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=(P(), P(), P(axis_name)),
+        check_vma=False,
+    )(arranged, xs)
+    return loss, outs, unarrange_params_for_schedule(gparams, schedule)
+
+
+# ---------------------------------------------------------------------------
 # Simulator-facing byte accounting
 # ---------------------------------------------------------------------------
 
@@ -119,3 +338,18 @@ def pipeline_transfer_bytes(
     hop = boundary_bytes(activation_shape, dtype)
     hops = (n_stages - 1) * n_microbatches
     return hop * hops * (2 if backward else 1)
+
+
+def schedule_transfer_bytes(
+    schedule: PipelineSchedule, activation_shape, dtype=jnp.float32
+) -> float:
+    """Scheduled-executor twin of :func:`pipeline_transfer_bytes`.
+
+    Total boundary traffic of one step under an arbitrary schedule: every
+    microbatch crosses each of the ``S*v - 1`` virtual-stage boundaries once
+    per direction.  For v == 1 this equals ``pipeline_transfer_bytes``; for
+    interleaved schedules it is ``v``x larger per boundary count — the real
+    comm price of the smaller bubble, and what the simulator's
+    collective-permute nodes must sum to (tests/test_schedule_parity.py).
+    """
+    return schedule.comm_bytes(boundary_bytes(activation_shape, dtype))

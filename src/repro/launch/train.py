@@ -74,6 +74,46 @@ def comm_report(cfg, mesh, params, *, batch: int, seq: int, log_fn=print) -> Non
         )
 
 
+def pipeline_plan_report(
+    cfg, *, pp: int, schedule: str, vstages: int, microbatches: int,
+    batch: int, seq: int, log_fn=print,
+):
+    """Simulate the requested pipeline schedule for this config and log it.
+
+    The sim side of the sim-vs-real loop at launch time: the same
+    ``repro.dist.schedules`` step table the shard_map executor would run is
+    priced by the DES — bubble fraction, comm share, and the scheduled
+    boundary traffic — so a schedule choice is visible before any chip is
+    committed.  Reuses ``Autotuner.evaluate`` so the launch report can
+    never drift from what the tuner would score.  Falls back with a log
+    line (instead of failing the launch) when the config cannot realize the
+    schedule, e.g. layers not divisible by pp*vstages.
+    """
+    from repro.core.autotuner import Autotuner, layer_cost_from_config
+    from repro.core.strategy import Strategy
+
+    strategy = Strategy(pp=pp, microbatches=microbatches, schedule=schedule,
+                        vstages=vstages)
+    tuner = Autotuner(cfg, chips=pp, global_batch=max(batch, microbatches),
+                      seq=seq)
+    try:
+        result = tuner.evaluate(strategy)
+    except (ValueError, AssertionError, ZeroDivisionError) as e:
+        log_fn(f"[pp-plan] {strategy.describe()} not realizable: {e}")
+        return None
+    micro_bs = max(batch // microbatches, 1)
+    cost = layer_cost_from_config(cfg, micro_bs, seq, tp=1)
+    hops = strategy.make_pipeline_schedule().comm_bytes(cost.boundary_bytes)
+    log_fn(
+        f"[pp-plan] {strategy.describe()}: simulated step "
+        f"{result.makespan_s * 1e3:.2f}ms, "
+        f"bubble {result.bubble_fraction * 100:.1f}%, "
+        f"comm share {result.comm_fraction * 100:.1f}%, "
+        f"boundary traffic {hops / 2**20:.2f} MiB/step"
+    )
+    return result
+
+
 def train(
     cfg,
     *,
@@ -181,6 +221,17 @@ def main() -> None:
     ap.add_argument("--moe-impl", choices=["einsum", "ep_a2a"], default=None,
                     help="MoE execution strategy (ep_a2a = explicit "
                          "all-to-all expert parallelism, repro.dist.ep_a2a)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages to plan for (simulated schedule "
+                         "report before training)")
+    ap.add_argument("--pp-schedule", default="1f1b",
+                    choices=["gpipe", "1f1b", "interleaved_1f1b"],
+                    help="pipeline schedule (repro.dist.schedules)")
+    ap.add_argument("--vstages", type=int, default=1,
+                    help="virtual stages per device (interleaved_1f1b)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="pipeline microbatches for the schedule plan "
+                         "(default: --pp)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -197,6 +248,16 @@ def main() -> None:
         )
     if args.layers:
         cfg = dataclasses.replace(cfg, num_layers=args.layers)
+    if args.pp > 1 or args.vstages > 1:
+        pipeline_plan_report(
+            cfg,
+            pp=args.pp,
+            schedule=args.pp_schedule,
+            vstages=args.vstages,
+            microbatches=args.microbatches or max(args.pp, 1),
+            batch=args.batch,
+            seq=args.seq,
+        )
     train(
         cfg,
         steps=args.steps,
