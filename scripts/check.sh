@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate: collection must be clean and the fast suite green.
-# The slow subprocess tier (forced multi-device hosts) runs with: check.sh slow
+# Tier-1 verification gate: collection must be clean and the fast suite green
+# (includes the compressed-training parity suite, tests/test_train_compressed.py,
+# and the estimator-determinism check).
+# The slow subprocess tier (forced multi-device hosts, incl. 8-device
+# compressed data-parallel training) runs with: check.sh slow
 # Docs job (markdown links + schedule-accuracy smoke) runs with: check.sh docs
+# Standalone estimator reproducibility gate: check.sh determinism
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,6 +13,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "slow" ]]; then
     exec python -m pytest -q -m slow
+fi
+
+if [[ "${1:-}" == "determinism" ]]; then
+    # same-DB-twice across processes with different hash salts — guards the
+    # stable-digest seeding of the per-family time-model fits
+    exec python -m pytest -q \
+        tests/test_estimator_db.py::test_estimator_deterministic_across_processes
 fi
 
 if [[ "${1:-}" == "docs" ]]; then

@@ -1,4 +1,5 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
+    CKPT_FORMAT,
     AsyncCheckpointer,
     latest_step,
     restore,

@@ -1,15 +1,30 @@
 """Sharded checkpointing with atomic manifests and an async writer.
 
 Layout:  <dir>/step_<N>/
-            manifest.json      {"step": N, "leaves": {path: file}, "complete": true}
+            manifest.json      {"format": 2, "step": N,
+                                "leaves": {path: file}, "complete": true}
             <leaf>.npy         one file per pytree leaf (host-local shard on
                                multi-host; full array on single-host)
+
+Format history (see docs/compressed_training.md):
+  v1 — implicit (no "format" key).  Leaf keys fell through to ``str(k)``
+       for attribute paths, so NamedTuple fields were spelled ``.step`` /
+       ``.params`` (and saved as hidden dot-files).  No ``comp_state``.
+  v2 — "format": 2.  Attribute path keys use the attribute *name*
+       (``step``, ``params/...``); :class:`repro.train.step.TrainState`
+       carries the ``comp_state`` error-feedback residuals of compressed
+       data-parallel training.  ``restore`` migrates v1 checkpoints in
+       place (dotted key spellings are normalized), and missing
+       ``comp_state`` leaves are zero-initialized for *any* format — a
+       dense checkpoint (v1, or v2 written with compression off) resumes
+       compressed training from zero residuals, which is exact: error
+       feedback starts at zero by definition.
 
 Crash safety: leaves are written first, the manifest last (atomic rename), so
 a reader only trusts directories with a complete manifest.  ``restore`` walks
 steps newest-first and skips corrupt/incomplete checkpoints — the
 checkpoint/restart path of the fault-tolerance story (tested with injected
-corruption in tests/test_ckpt.py).
+corruption in tests/test_ckpt_data_ft.py).
 """
 from __future__ import annotations
 
@@ -24,22 +39,57 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+CKPT_FORMAT = 2
+
+# leaf keys that may be missing from any manifest and are zero-initialized
+# on restore: dense checkpoints (v1 always, v2 when compression was off)
+# carry no error-feedback residuals, and zero residuals resume compressed
+# training exactly
+_ZERO_INIT_PREFIXES = ("comp_state",)
+
+
+def _path_key(k) -> str:
+    # DictKey -> .key, SequenceKey/FlattenedIndexKey -> .idx/.key,
+    # GetAttrKey (NamedTuple / dataclass fields) -> .name.  Falling through
+    # to str(k) for GetAttrKey would yield ".step"-style hidden dot-files.
+    for attr in ("key", "idx", "name"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
+
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = "/".join(_path_key(k) for k in path)
         flat[key] = np.asarray(leaf)
     return flat
 
 
-def _unflatten(tree_like, flat: dict[str, np.ndarray]):
+def _migrate_v1_keys(flat: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Normalize v1 key spellings to v2: strip the ``str(GetAttrKey)`` dot
+    prefix from every path segment (``.params/w`` -> ``params/w``)."""
+    return {
+        "/".join(seg.lstrip(".") for seg in key.split("/")): arr
+        for key, arr in flat.items()
+    }
+
+
+def _unflatten(
+    tree_like,
+    flat: dict[str, np.ndarray],
+    zero_init_prefixes: tuple[str, ...] = (),
+):
     paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
     treedef = jax.tree_util.tree_structure(tree_like)
     leaves = []
     for path, like in paths:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = "/".join(_path_key(k) for k in path)
         if key not in flat:
+            if key.startswith(zero_init_prefixes or ("\0",)):
+                leaves.append(np.zeros(tuple(like.shape), like.dtype))
+                continue
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = flat[key]
         if tuple(arr.shape) != tuple(like.shape):
@@ -63,7 +113,12 @@ def save(tree, directory: str, step: int, keep: int = 3) -> str:
         fname = key.replace("/", "__") + ".npy"
         np.save(os.path.join(tmp, fname), arr)
         leaves[key] = fname
-    manifest = {"step": step, "leaves": leaves, "complete": True}
+    manifest = {
+        "format": CKPT_FORMAT,
+        "step": step,
+        "leaves": leaves,
+        "complete": True,
+    }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -102,10 +157,18 @@ def _try_load(directory: str, step: int, tree_like):
         manifest = json.load(f)
     if not manifest.get("complete"):
         raise ValueError("incomplete manifest")
+    fmt = int(manifest.get("format", 1))
+    if fmt > CKPT_FORMAT:
+        raise ValueError(f"checkpoint format {fmt} > supported {CKPT_FORMAT}")
     flat = {}
     for key, fname in manifest["leaves"].items():
         flat[key] = np.load(os.path.join(path, fname))
-    return _unflatten(tree_like, flat), manifest["step"]
+    if fmt < 2:
+        flat = _migrate_v1_keys(flat)
+    return (
+        _unflatten(tree_like, flat, zero_init_prefixes=_ZERO_INIT_PREFIXES),
+        manifest["step"],
+    )
 
 
 def restore(tree_like, directory: str) -> Optional[tuple[Any, int]]:

@@ -44,12 +44,20 @@ def layer_cost_from_config(
     layer_params = (
         cfg.num_params() - 2 * cfg.vocab_size * d
     ) / max(cfg.num_layers, 1)
+    # analytic tensor count per layer: qkv/o projections + two norms, plus
+    # the FFN matrices (router + expert stack for MoE) — feeds the
+    # per-tensor scale metadata of compressed gradient all-reduces
+    if cfg.moe is not None:
+        ffn_tensors = 1 + 3  # router + gate/up/down expert stacks
+    else:
+        ffn_tensors = 3
     return LayerCost(
         fwd_flops=flops,
         fwd_bytes=4.0 * act_bytes / tp + layer_params * dtype_bytes / tp,
         bwd_multiplier=2.0,
         boundary_bytes=act_bytes,
         grad_bytes=layer_params * dtype_bytes / tp,
+        grad_tensors=4 + 2 + ffn_tensors,
     )
 
 

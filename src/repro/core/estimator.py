@@ -17,6 +17,7 @@ Fallback chain per graph node:
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass
 from typing import Optional
 
@@ -147,8 +148,11 @@ def dist_comm_bytes(node: OpNode) -> float:
 
     Graph producers annotate rather than pre-bake: ``comm_bytes`` stays the
     raw dense payload and ``node.meta`` carries the strategy —
-    ``{"compression": scheme, "grad_elems": n}`` on a compressed gradient
-    all-reduce (see ``repro.core.strategy.pipeline_graph``), or
+    ``{"compression": scheme, "grad_elems": n, "n_tensors": t}`` (plus the
+    exact ``"grad_leaf_elems": [n_0, ...]`` when the gradient pytree is
+    known, see ``repro.core.strategy.grad_allreduce_node_meta``) on a
+    compressed gradient all-reduce (see
+    ``repro.core.strategy.pipeline_graph``), or
     ``{"moe_a2a": {...}}`` on an expert-parallel all-to-all (see
     ``repro.core.strategy.moe_a2a_node_meta``).  Unannotated nodes — e.g.
     pipeline boundary sends, whose ``comm_bytes`` already equal the exact
@@ -157,10 +161,23 @@ def dist_comm_bytes(node: OpNode) -> float:
     """
     scheme = node.meta.get("compression")
     if scheme and scheme != "none":
-        from repro.dist.compress import compressed_allreduce_bytes
+        from repro.dist.compress import (
+            compressed_allreduce_bytes,
+            tree_allreduce_bytes,
+        )
 
+        # exact per-leaf accounting when the producer knows the gradient
+        # pytree (int8 ships one f32 scale per tensor; topk rounds the kept
+        # count per leaf) — matches the executor twin
+        # ``compressed_psum_bytes`` leaf for leaf
+        leaf_elems = node.meta.get("grad_leaf_elems")
+        if leaf_elems:
+            return tree_allreduce_bytes(leaf_elems, scheme=scheme)
         elems = int(node.meta.get("grad_elems") or node.comm_bytes // 4)
-        return compressed_allreduce_bytes(elems, scheme=scheme)
+        n_tensors = int(node.meta.get("n_tensors", 1))
+        return compressed_allreduce_bytes(
+            elems, n_tensors=n_tensors, scheme=scheme
+        )
     a2a = node.meta.get("moe_a2a")
     if a2a:
         from repro.dist.ep_a2a import a2a_payload_bytes
@@ -217,7 +234,12 @@ class OpTimeEstimator:
                         for e in db.entries(platform.name, fam)
                         if e.mean_s > 0 and (e.flops > 0 or e.bytes > 0)
                     ]
-                    m = fit_time_model(pts, seed=hash(key) % 2**31)
+                    # stable digest, NOT hash(): Python string hashing is
+                    # salted per process, which made fitted time models (and
+                    # simulated timelines) differ between runs of the same DB
+                    m = fit_time_model(
+                        pts, seed=zlib.crc32(key.encode("utf-8")) % 2**31
+                    )
                     if m is not None:
                         self.models[key] = m
         self.stats = {"db": 0, "learned": 0, "analytic": 0, "newop": 0}

@@ -76,6 +76,10 @@ class LayerCost:
     boundary_bytes: float = 0.0
     # gradient all-reduce payload per stage (dp > 1)
     grad_bytes: float = 0.0
+    # distinct gradient tensors behind grad_bytes — compressed schemes ship
+    # per-tensor metadata (one f32 scale each for int8), so the estimator
+    # needs the count, not just the element total
+    grad_tensors: int = 1
 
 
 class GraphBuilder:
@@ -206,6 +210,7 @@ def pipeline_graph(
             meta = {
                 "compression": strategy.compression,
                 "grad_elems": int(cost.grad_bytes // 4),
+                "n_tensors": int(cost.grad_tensors),
             }
         for s in range(S):
             b.add(
@@ -216,6 +221,33 @@ def pipeline_graph(
                 meta=dict(meta),
             )
     return b.build()
+
+
+def grad_allreduce_node_meta(grads, scheme: str) -> dict:
+    """Exact annotation for a compressed dp gradient all-reduce node.
+
+    ``grads`` is either the gradient pytree itself (e.g. the abstract
+    params of a real model) or a flat list of per-leaf element counts.
+    The annotation carries the full per-leaf breakdown, so
+    ``estimator.dist_comm_bytes`` prices precisely what the executor's
+    byte twin (``repro.dist.compress.compressed_psum_bytes``) reports for
+    the same tree — per-tensor scale metadata and per-leaf topk rounding
+    included.  Parity is asserted in tests/test_train_compressed.py.
+    """
+    if isinstance(grads, (list, tuple)) and all(
+        isinstance(n, int) for n in grads
+    ):
+        elems = [int(n) for n in grads]
+    else:
+        from repro.dist.compress import leaf_elems
+
+        elems = leaf_elems(grads)
+    return {
+        "compression": scheme,
+        "grad_elems": int(sum(elems)),
+        "n_tensors": len(elems),
+        "grad_leaf_elems": elems,
+    }
 
 
 def moe_a2a_node_meta(

@@ -21,10 +21,14 @@ from repro.dist.compress import (  # noqa: F401
     compress_with_feedback,
     compressed_allreduce_bytes,
     compressed_psum,
+    compressed_psum_bytes,
     dequantize_int8,
     init_compression_state,
+    init_feedback_state,
+    leaf_elems,
     quantize_int8,
     topk_sparsify,
+    tree_allreduce_bytes,
 )
 from repro.dist.ep_a2a import moe_a2a_bytes, moe_ffn_ep_a2a  # noqa: F401
 from repro.dist.pp import (  # noqa: F401

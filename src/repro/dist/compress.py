@@ -82,10 +82,28 @@ def init_compression_state(tree):
     )
 
 
-def compressed_psum(grads, axis_name: str, state):
+def init_feedback_state(tree, dp: int = 1):
+    """Zero residuals with an explicit per-replica leading axis.
+
+    The train loop carries one residual per data-parallel rank; leaves are
+    ``(dp, *leaf.shape)`` f32 so the launcher can shard the leading axis over
+    the ``data`` mesh axis (each shard_map body sees its own ``(1, ...)``
+    slice).  ``dp=1`` is the single-process / no-mesh layout.
+    """
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros((dp,) + tuple(jnp.shape(g)), jnp.float32), tree
+    )
+
+
+def compressed_psum(grads, axis_name, state):
     """Mean-reduce a gradient pytree over ``axis_name`` with int8 payloads.
 
-    Must run inside ``shard_map`` (or ``pmap``) with ``axis_name`` bound.
+    Runs inside ``shard_map`` (or ``pmap``) with ``axis_name`` bound; with
+    ``axis_name=None`` the reduction degenerates to the identity mean
+    (dp=1), so the same quantize -> reduce -> dequantize step — error
+    feedback included — executes without any mesh (single-device training,
+    unit tests).
+
     Each device quantizes its local gradient (plus carried residual), the
     int8 payloads are summed in f32 via ``psum``, and the mean is returned
     together with the per-device residual state for the next step.
@@ -95,14 +113,16 @@ def compressed_psum(grads, axis_name: str, state):
     """
     if state is None:
         state = init_compression_state(grads)
-    size = jax.lax.psum(1, axis_name)
+    size = 1 if axis_name is None else jax.lax.psum(1, axis_name)
 
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     res_leaves = jax.tree_util.tree_leaves(state)
     means, new_res = [], []
     for g, r in zip(leaves, res_leaves):
         q, scale, nr = compress_with_feedback(g, r)
-        total = jax.lax.psum(dequantize_int8(q, scale), axis_name)
+        total = dequantize_int8(q, scale)
+        if axis_name is not None:
+            total = jax.lax.psum(total, axis_name)
         means.append(total / size)
         new_res.append(nr)
     return (
@@ -137,3 +157,49 @@ def compressed_allreduce_bytes(
     if scheme in ("none", ""):
         return 4.0 * n_elems
     raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+def tree_allreduce_bytes(leaf_elems, scheme: str = "int8") -> float:
+    """Per-device payload of a compressed all-reduce over a gradient *tree*.
+
+    ``leaf_elems`` is the element count of each pytree leaf.  Per-leaf
+    accounting matters: int8 ships one f32 scale per tensor (so the total is
+    ``sum(n_i) + 4 * n_tensors``, not ``sum(n_i) + 4``) and ``topk`` rounds
+    the kept count per leaf.  This is the exact sum over leaves of
+    :func:`compressed_allreduce_bytes` with ``n_tensors=1``.
+    """
+    return float(
+        sum(
+            compressed_allreduce_bytes(int(n), n_tensors=1, scheme=scheme)
+            for n in leaf_elems
+        )
+    )
+
+
+def leaf_elems(tree) -> list[int]:
+    """Element count of every pytree leaf (arrays or ShapeDtypeStructs).
+
+    The single source of per-leaf sizing shared by the executor byte twin
+    and the strategy-graph annotations
+    (``repro.core.strategy.grad_allreduce_node_meta``).
+    """
+    out = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = 1
+        for s in jnp.shape(leaf):
+            n *= int(s)
+        out.append(n)
+    return out
+
+
+def compressed_psum_bytes(grads, scheme: str = "int8") -> float:
+    """Executor-side byte twin of :func:`compressed_psum`.
+
+    The per-device payload a compression-aware ring would move for this
+    exact gradient pytree — what the simulator's annotated gradient
+    all-reduce node must price (``repro.core.estimator.dist_comm_bytes``
+    resolves ``grad_leaf_elems`` annotations through
+    :func:`tree_allreduce_bytes`, so the two are equal by construction;
+    asserted end-to-end in tests/test_train_compressed.py).
+    """
+    return tree_allreduce_bytes(leaf_elems(grads), scheme=scheme)

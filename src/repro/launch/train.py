@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, restore
 from repro.compat import AxisType, make_mesh
@@ -28,9 +27,14 @@ from repro.configs.base import ShapeConfig, get_config, smoke_variant
 from repro.data import make_train_iterator
 from repro.ft import HeartbeatMonitor, StepTimeMonitor, StragglerPolicy
 from repro.models import build_model
-from repro.models.sharding import make_ctx, tree_shardings, use_sharding
+from repro.models.sharding import (
+    data_axis_size,
+    make_ctx,
+    tree_shardings,
+    use_sharding,
+)
 from repro.optim import cosine_with_warmup, make_optimizer
-from repro.train import make_train_step
+from repro.train import make_sharded_train_step, make_train_step
 from repro.train.step import TrainState, init_state
 
 
@@ -42,26 +46,28 @@ def build_mesh():
     )
 
 
-def comm_report(cfg, mesh, params, *, batch: int, seq: int, log_fn=print) -> None:
+def comm_report(
+    cfg, mesh, params, *, batch: int, seq: int,
+    compression: str = "none", log_fn=print,
+) -> None:
     """Log the per-step comm volumes the dist layer would move on this mesh.
 
     The sim-vs-real loop at a glance: raw vs int8-compressed gradient
-    all-reduce payload (repro.dist.compress) and, for ep_a2a MoE configs,
+    all-reduce payload — priced per leaf via the same executor byte twin
+    (``compressed_psum_bytes``) the simulator's annotated graph resolves
+    to, per-tensor scale metadata included — and, for ep_a2a MoE configs,
     the per-device dispatch all-to-all payload (repro.dist.ep_a2a).
     """
-    from repro.dist.compress import compressed_allreduce_bytes
+    from repro.dist.compress import compressed_psum_bytes
 
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dp = sizes.get("data", 1) * sizes.get("pod", 1)
-    n_params = sum(
-        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params)
-    )
-    raw = compressed_allreduce_bytes(n_params, scheme="none")
-    int8 = compressed_allreduce_bytes(n_params)
+    dp = data_axis_size(mesh)
+    raw = compressed_psum_bytes(params, scheme="none")
+    int8 = compressed_psum_bytes(params, scheme="int8")
+    active = " (ACTIVE: error-feedback psum)" if compression == "int8" else ""
     log_fn(
         f"[comm] dp={dp} grad all-reduce/step: raw {raw / 2**20:.1f} MiB; "
         f"an int8+feedback ring would move {int8 / 2**20:.1f} MiB "
-        f"({raw / int8:.1f}x less)"
+        f"({raw / int8:.1f}x less){active}"
     )
     if cfg.moe is not None and cfg.moe.impl == "ep_a2a":
         from repro.dist.ep_a2a import moe_a2a_bytes
@@ -125,6 +131,7 @@ def train(
     lr: float = 3e-4,
     warmup: int = 20,
     grad_accum: int = 1,
+    compression: str = "none",
     log_every: int = 10,
     ckpt_every: int = 50,
     host_id: int = 0,
@@ -134,15 +141,26 @@ def train(
 ):
     shape = ShapeConfig("train_driver", seq, batch, "train")
     mesh = build_mesh()
+    dp = data_axis_size(mesh)
     ctx = make_ctx(mesh, overrides=cfg.sharding_overrides)
     model = build_model(cfg)
     opt = make_optimizer(cfg.optimizer)
     sched = cosine_with_warmup(lr, warmup, max(steps, warmup + 1))
-    step_fn = make_train_step(model, opt, sched, grad_accum=grad_accum)
+    # one factory for both strategies: dense returns the plain jit-able
+    # step; compressed wraps the same body in shard_map over "data" with
+    # the per-rank error-feedback residuals threaded through TrainState
+    step_fn = make_sharded_train_step(
+        model, opt, sched, mesh,
+        grad_accum=grad_accum, compression=compression,
+    )
 
     with use_sharding(ctx):
-        state, axes = init_state(model, jax.random.PRNGKey(seed), opt)
-        comm_report(cfg, mesh, state.params, batch=batch, seq=seq, log_fn=log_fn)
+        state, axes = init_state(
+            model, jax.random.PRNGKey(seed), opt,
+            compression=compression, dp=dp,
+        )
+        comm_report(cfg, mesh, state.params, batch=batch, seq=seq,
+                    compression=compression, log_fn=log_fn)
         start_step = 0
         ckpt = None
         if ckpt_dir:
@@ -213,6 +231,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compression", choices=["none", "int8"], default="none",
+                    help="compressed data-parallel gradients: int8 "
+                         "quantize->psum->dequantize with error-feedback "
+                         "residuals carried in TrainState.comp_state "
+                         "(repro.dist.compress; checkpoint format v2)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--no-restore", action="store_true")
     ap.add_argument("--d-model", type=int, default=0,
@@ -265,6 +288,7 @@ def main() -> None:
         batch=args.batch,
         lr=args.lr,
         grad_accum=args.grad_accum,
+        compression=args.compression,
         ckpt_dir=args.ckpt_dir,
         restore_from=not args.no_restore,
     )

@@ -196,6 +196,17 @@ class ShardingCtx:
         return P(*parts)
 
 
+def data_axis_size(mesh: Mesh) -> int:
+    """Number of data-parallel replicas a mesh realizes (pod x data).
+
+    The dp width the compressed-gradient layer needs: the leading axis of
+    ``TrainState.comp_state`` residual leaves, the divisor of the
+    compressed all-reduce mean, and the replica count in comm reports.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
 # ---------------------------------------------------------------------------
 # Context plumbing
 # ---------------------------------------------------------------------------

@@ -1,1 +1,9 @@
-from repro.train.step import TrainState, make_train_step, make_eval_step  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    TrainState,
+    abstract_state,
+    init_state,
+    make_eval_step,
+    make_sharded_train_step,
+    make_train_step,
+    train_state_specs,
+)

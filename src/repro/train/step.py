@@ -1,10 +1,20 @@
-"""Train-step factory: loss -> grad -> clip -> optimizer, with microbatch
-gradient accumulation (``lax.scan``) and donated buffers.
+"""Train-step factory: loss -> grad -> (compressed) reduce -> clip ->
+optimizer, with microbatch gradient accumulation (``lax.scan``) and donated
+buffers.
 
 The microbatch scan is also the compute/communication overlap vehicle: XLA's
 latency-hiding scheduler can overlap microbatch i's gradient reduction with
 microbatch i+1's backward once the accumulation is expressed as a loop
 (see EXPERIMENTS.md §Perf).
+
+Compressed data parallelism (``compression="int8"``) threads the
+error-feedback residual state of :mod:`repro.dist.compress` through
+:class:`TrainState`: each step quantizes the (accumulated) local gradient
+plus the carried residual, mean-reduces the payload over ``axis_name`` via
+``compressed_psum``, and stores the new residual in ``state.comp_state`` —
+the same code path runs under ``shard_map`` on a real data mesh
+(:func:`make_sharded_train_step`) and standalone with ``axis_name=None``
+(dp=1), so the executable numerics the simulator prices are never forked.
 """
 from __future__ import annotations
 
@@ -13,6 +23,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models.build import Model
@@ -23,22 +34,74 @@ class TrainState(NamedTuple):
     step: jax.Array          # i32 scalar
     params: Any
     opt_state: Any
+    # error-feedback residuals for compressed data-parallel training
+    # (checkpoint format v2).  None when compression is off — a leafless
+    # pytree node, so dense states keep the v1 leaf set.  When on: a pytree
+    # matching params with f32 leaves of shape (dp, *param_shape), one
+    # residual per data-parallel rank; the launcher shards the leading axis
+    # over the "data" mesh axis (see train_state_specs).
+    comp_state: Any = None
 
 
-def init_state(model: Model, rng, optimizer: Optimizer) -> tuple[TrainState, Any]:
+def _normalize_compression(compression: Optional[str]) -> Optional[str]:
+    if compression in (None, "", "none"):
+        return None
+    if compression != "int8":
+        raise ValueError(
+            f"executable compression scheme must be 'int8' (got "
+            f"{compression!r}; topk is byte-accounting-only, see "
+            f"repro.dist.compress)"
+        )
+    return compression
+
+
+def train_state_specs(comp_axis: str = "data") -> "TrainState":
+    """Per-field PartitionSpecs of a TrainState under data-parallel
+    shard_map: everything replicated except the per-rank residuals, whose
+    leading axis is split over ``comp_axis``."""
+    return TrainState(P(), P(), P(), P(comp_axis))
+
+
+def init_state(
+    model: Model,
+    rng,
+    optimizer: Optimizer,
+    compression: Optional[str] = None,
+    dp: int = 1,
+) -> tuple[TrainState, Any]:
     params, axes = model.init(rng)
     opt_state = optimizer.init(params)
-    return TrainState(jnp.zeros((), jnp.int32), params, opt_state), axes
+    comp = None
+    if _normalize_compression(compression):
+        from repro.dist.compress import init_feedback_state
+
+        comp = init_feedback_state(params, dp)
+    return (
+        TrainState(jnp.zeros((), jnp.int32), params, opt_state, comp),
+        axes,
+    )
 
 
-def abstract_state(model: Model, optimizer: Optimizer, seed: int = 0):
+def abstract_state(
+    model: Model,
+    optimizer: Optimizer,
+    seed: int = 0,
+    compression: Optional[str] = None,
+    dp: int = 1,
+):
     """ShapeDtypeStructs of the full TrainState + the param axes tree."""
     box = {}
+    comp_on = _normalize_compression(compression) is not None
 
     def build(rng):
         p, a = model.init(rng)
         box["axes"] = a
-        return TrainState(jnp.zeros((), jnp.int32), p, optimizer.init(p))
+        comp = None
+        if comp_on:
+            from repro.dist.compress import init_feedback_state
+
+            comp = init_feedback_state(p, dp)
+        return TrainState(jnp.zeros((), jnp.int32), p, optimizer.init(p), comp)
 
     shapes = jax.eval_shape(build, jax.random.PRNGKey(seed))
     return shapes, box["axes"]
@@ -59,13 +122,26 @@ def make_train_step(
     schedule,
     grad_accum: int = 1,
     max_grad_norm: float = 1.0,
+    compression: Optional[str] = None,
+    axis_name: Optional[str] = None,
 ):
     """Returns train_step(state, batch) -> (state, metrics).
 
-    grad_accum > 1 scans over microbatches accumulating the mean gradient in
-    fp32 before one optimizer application.
+    grad_accum > 1 scans over microbatches accumulating the mean gradient
+    (and the mean of the model's aux metrics) in fp32 before one optimizer
+    application.
+
+    With ``compression`` set, the gradient mean over ``axis_name`` runs
+    through ``repro.dist.compress.compressed_psum`` — quantize, psum the
+    dequantized payload, carry the per-rank error-feedback residual in
+    ``state.comp_state``.  ``axis_name=None`` executes the identical
+    numerics without a mesh (dp=1).  When ``axis_name`` is set the step
+    must run inside ``shard_map`` (see :func:`make_sharded_train_step`);
+    batch-level loss/metrics are pmean'd so every rank returns the global
+    value.
     """
     cfg: ArchConfig = model.cfg
+    compression = _normalize_compression(compression)
 
     def loss_fn(params, microbatch):
         loss, metrics = model.loss(params, microbatch)
@@ -81,25 +157,53 @@ def make_train_step(
         else:
             micro = _split_microbatches(batch, grad_accum)
 
+            # metric structure (without compute) to seed the scan carry —
+            # per-microbatch means are accumulated alongside the gradient
+            # so accumulation never drops the model's aux metrics
+            mb0 = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), micro
+            )
+            (_, mshapes), _ = jax.eval_shape(grad_fn, params, mb0)
+            mzero = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, jnp.float32), mshapes
+            )
+
             def accum_body(carry, mb):
-                gsum, lsum = carry
-                (l, _m), g = grad_fn(params, mb)
+                gsum, lsum, msum = carry
+                (l, m), g = grad_fn(params, mb)
                 gsum = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), gsum, g
                 )
-                return (gsum, lsum + l), None
+                msum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), msum, m
+                )
+                return (gsum, lsum + l, msum), None
 
             gzero = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (gsum, lsum), _ = jax.lax.scan(
-                accum_body, (gzero, 0.0), micro
+            (gsum, lsum, msum), _ = jax.lax.scan(
+                accum_body, (gzero, 0.0, mzero), micro
             )
             grads = jax.tree_util.tree_map(
                 lambda g: (g / grad_accum), gsum
             )
             loss = lsum / grad_accum
-            metrics = {}
+            metrics = jax.tree_util.tree_map(lambda s: s / grad_accum, msum)
+
+        comp_state = state.comp_state
+        if compression is not None:
+            from repro.dist.compress import compressed_psum
+
+            # local residual: this rank's (1, ...) slice of the carried state
+            res = jax.tree_util.tree_map(lambda r: r[0], state.comp_state)
+            grads, new_res = compressed_psum(grads, axis_name, res)
+            comp_state = jax.tree_util.tree_map(lambda r: r[None], new_res)
+            if axis_name is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+                metrics = jax.tree_util.tree_map(
+                    lambda m: jax.lax.pmean(m, axis_name), metrics
+                )
 
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         lr = schedule(state.step)
@@ -118,11 +222,59 @@ def make_train_step(
             **{k: v for k, v in (metrics or {}).items()},
         }
         return (
-            TrainState(state.step + 1, new_params, opt_state),
+            TrainState(state.step + 1, new_params, opt_state, comp_state),
             out_metrics,
         )
 
     return train_step
+
+
+def make_sharded_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    schedule,
+    mesh,
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+    compression: Optional[str] = None,
+    axis_name: str = "data",
+):
+    """The train step wrapped for a data mesh — the launcher's entry point.
+
+    Dense training returns the plain step (GSPMD handles the gradient mean
+    under jit).  Compressed training needs explicit per-device gradients,
+    so the *same* :func:`make_train_step` body is wrapped in ``shard_map``:
+    batch split over ``axis_name``, state replicated except the per-rank
+    ``comp_state`` slice.  One step function, both strategies — the
+    simulator's priced `Strategy.compression` always has this executable
+    counterpart.
+    """
+    compression = _normalize_compression(compression)
+    step = make_train_step(
+        model, optimizer, schedule,
+        grad_accum=grad_accum, max_grad_norm=max_grad_norm,
+        compression=compression,
+        axis_name=axis_name if compression else None,
+    )
+    if compression is None:
+        return step
+    from repro.compat import shard_map
+    from repro.models.sharding import use_sharding
+
+    def body(state, batch):
+        # inside shard_map the mesh axes are manual — the ambient sharding
+        # context's with_sharding_constraint hints must not fire
+        with use_sharding(None):
+            return step(state, batch)
+
+    specs = train_state_specs(axis_name)
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(specs, P(axis_name)),
+        out_specs=(specs, P()),
+        check_vma=False,
+    )
 
 
 def make_eval_step(model: Model):

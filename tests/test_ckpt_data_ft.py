@@ -81,6 +81,33 @@ def test_async_checkpointer(tmp_path):
     assert latest_step(str(tmp_path)) == 7
 
 
+def test_ckpt_full_train_state_roundtrip(tmp_path):
+    """Regression: NamedTuple fields (GetAttrKey paths) must produce named
+    leaf files, not hidden dot-files (`.step.npy`), and a full TrainState
+    must roundtrip exactly."""
+    import jax
+    from repro.optim import adamw
+    from repro.train.step import TrainState
+
+    params = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    opt = adamw()
+    state = TrainState(
+        jnp.asarray(11, jnp.int32), params, opt.init(params), None
+    )
+    path = save(state, str(tmp_path), step=11)
+    files = os.listdir(path)
+    assert not any(f.startswith(".") for f in files), files
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    assert "step" in manifest["leaves"]
+    assert any(k.startswith("params/") for k in manifest["leaves"])
+    restored, at = restore(state, str(tmp_path))
+    assert at == 11 and int(restored.step) == 11
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_ckpt_shape_mismatch_rejected(tmp_path):
     t = tree()
     save(t, str(tmp_path), step=1)

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.dist.compress import (
     compress_with_feedback,
@@ -30,6 +31,36 @@ def test_error_feedback_unbiased_accumulation(rng):
     total_true = sum(np.asarray(g) for g in true)
     np.testing.assert_allclose(
         np.asarray(sent + residual), total_true, rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.lists(
+            st.floats(-100.0, 100.0, allow_nan=False, allow_infinity=False),
+            min_size=6, max_size=6,
+        ),
+        min_size=1, max_size=12,
+    )
+)
+def test_error_feedback_unbiased_property(steps):
+    """Property (any step sequence, incl. zeros/ties/huge dynamic range):
+    sum of dequantized payloads + final residual == sum of true gradients.
+    Runs under real hypothesis or repro.testing.hypothesis_fallback."""
+    residual = jnp.zeros(6)
+    sent = jnp.zeros(6)
+    for vals in steps:
+        g = jnp.asarray(vals, jnp.float32)
+        q, scale, residual = compress_with_feedback(g, residual)
+        sent = sent + dequantize_int8(q, scale)
+    total_true = np.sum(
+        np.asarray(steps, dtype=np.float32), axis=0
+    ) if steps else np.zeros(6, np.float32)
+    scale_mag = max(1.0, float(np.max(np.abs(np.asarray(steps)))))
+    np.testing.assert_allclose(
+        np.asarray(sent + residual), total_true,
+        atol=1e-4 * scale_mag * len(steps), rtol=1e-4,
     )
 
 

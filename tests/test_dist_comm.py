@@ -81,6 +81,54 @@ def test_estimator_prices_ep_a2a_from_dist_layer():
     )
 
 
+def test_gradar_n_tensors_scale_metadata_counted():
+    """The per-tensor f32 scale metadata the dist layer ships must be
+    priced: n_tensors flows from the strategy graph annotation into
+    compressed_allreduce_bytes (the default n_tensors=1 under-counted
+    multi-tensor gradients by 4*(T-1) bytes)."""
+    n_elems, n_tensors = 5_000, 9
+    cost = LayerCost(fwd_flops=1e6, fwd_bytes=1e4,
+                     grad_bytes=4.0 * n_elems, grad_tensors=n_tensors)
+    g = pipeline_graph(4, cost, Strategy(dp=4, pp=2, microbatches=2,
+                                         compression="int8"))
+    ars = [n for n in g.nodes if n.kind == "all-reduce"]
+    assert ars and all(n.meta["n_tensors"] == n_tensors for n in ars)
+    wire = compress.compressed_allreduce_bytes(n_elems, n_tensors=n_tensors)
+    assert all(dist_comm_bytes(n) == wire for n in ars)
+    assert wire == n_elems + compress.SCALE_BYTES * n_tensors
+
+
+def test_gradar_per_leaf_annotation_matches_executor_twin():
+    """grad_leaf_elems annotations price exactly what compressed_psum's
+    byte twin reports for the same gradient pytree."""
+    import jax.numpy as jnp
+
+    from repro.core.strategy import grad_allreduce_node_meta
+    from repro.core.graph import OpNode
+
+    tree = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,)),
+            "nested": {"e": jnp.zeros((7,))}}
+    for scheme in ("int8", "topk:0.01"):
+        meta = grad_allreduce_node_meta(tree, scheme)
+        node = OpNode(0, "gradAR", "all-reduce",
+                      comm_bytes=4.0 * meta["grad_elems"], group_size=4,
+                      link_kind="ici", meta=meta)
+        assert dist_comm_bytes(node) == compress.compressed_psum_bytes(
+            tree, scheme=scheme
+        )
+    # per-leaf topk rounding differs from aggregate rounding: 3 leaves of
+    # (2048, 32, 7) at 1% keep (20, 1, 1) = 22 pairs, not round(2087*0.01)
+    meta = grad_allreduce_node_meta(tree, "topk:0.01")
+    per_leaf = dist_comm_bytes(
+        OpNode(0, "a", "all-reduce", comm_bytes=4.0 * meta["grad_elems"],
+               group_size=4, link_kind="ici", meta=meta)
+    )
+    aggregate = compress.compressed_allreduce_bytes(
+        meta["grad_elems"], scheme="topk:0.01"
+    )
+    assert per_leaf != aggregate
+
+
 def test_topk_scheme_bytes():
     raw = compress.compressed_allreduce_bytes(1000, scheme="none")
     topk = compress.compressed_allreduce_bytes(1000, scheme="topk:0.01")

@@ -1,6 +1,9 @@
 """Estimator fallback chain, learned-model quality, DB roundtrip/merge."""
 import math
 import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -97,6 +100,58 @@ def test_db_merge_prefers_higher_samples():
     a.merge(b)
     assert a.lookup("p", "dot", {"m": 2}).mean_s == 2.0
     assert a.lookup("p", "dot", {"m": 4}).mean_s == 3.0
+
+
+_DETERMINISM_SCRIPT = textwrap.dedent(
+    """
+    from repro.core.database import ProfileDB
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.graph import OpNode
+    from repro.core.hardware import TPU_V5E
+
+    db = ProfileDB.load({db_path!r})
+    est = OpTimeEstimator(TPU_V5E, db)
+    nodes = [
+        OpNode(0, "d0", "dot", flops=2e9, in_bytes=4e6, out_bytes=4e6),
+        OpNode(1, "d1", "dot", flops=7e10, in_bytes=9e7, out_bytes=9e7),
+        OpNode(2, "d2", "convolution", flops=3e8, in_bytes=1e6, out_bytes=1e6),
+    ]
+    print(";".join(repr(est.duration(n)) for n in nodes))
+    """
+)
+
+
+def test_estimator_deterministic_across_processes(tmp_path):
+    """Acceptance: two OpTimeEstimator constructions from the same
+    ProfileDB in separate processes (different hash salts) produce
+    identical duration() outputs — the per-family fit seed must be a
+    stable digest, not salted hash()."""
+    db = ProfileDB()
+    rng = np.random.default_rng(7)
+    for i in range(12):
+        f = 10 ** rng.uniform(7, 11)
+        b = 10 ** rng.uniform(5, 8)
+        t = f / 1e11 + b / 1e10 + 1e-5
+        db.add("tpu_v5e", "dot",
+               ProfileEntry({"i": i}, t, 0.0, n=3, flops=f, bytes=b))
+    db_path = os.path.join(tmp_path, "db.json")
+    db.save(db_path)
+    script = _DETERMINISM_SCRIPT.format(db_path=db_path)
+    outs = []
+    for salt in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(__file__), "..", "src"
+        )
+        env["PYTHONHASHSEED"] = salt
+        out = subprocess.run(
+            [sys.executable, "-c", script], env=env,
+            capture_output=True, text=True, timeout=300,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        outs.append(out.stdout.strip())
+    assert outs[0] == outs[1], outs
+    assert outs[0]  # non-empty: the learned model actually fit
 
 
 @settings(max_examples=25, deadline=None)
