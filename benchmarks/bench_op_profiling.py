@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.database import ProfileDB
-from repro.core.profiler import OfflineProfiler, time_callable
+from repro.core.profiler import time_callable
 
 
 def run(values_per_arg: int = 16, repeats: int = 10) -> list[dict]:

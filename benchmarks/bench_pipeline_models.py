@@ -1,0 +1,171 @@
+"""Pipeline-model smoke bench: the sim <-> real numbers CI gates on.
+
+Deterministic, sub-minute metrics of the model-partitioning layer
+(``repro.models.pipeline``), written for the benchmark-regression gate
+(``scripts/bench_gate.py`` / ``scripts/check.sh bench``):
+
+  * schedule geometry of real-model plans — unit-tick makespan and bubble
+    of the DES over ``model_pipeline_graph`` (exact integers; any drift is
+    a schedule-layer regression);
+  * byte twins — boundary ppermute traffic, per-stage int8 gradient
+    all-reduce payload, MoE dispatch a2a payload (exact floats; any drift
+    is a sim-vs-real accounting regression);
+  * one real execution smoke — the tiny dense transformer run through the
+    scheduled executor on a single-stage mesh, reporting the loss and the
+    worst relative gradient error vs ``jax.grad`` of the GSPMD reference
+    (tolerance-banded in the gate: numerics may drift across BLAS builds,
+    parity must not).
+
+``--smoke`` skips the execution row (no jit; sub-second) for fast local
+iteration; CI runs the full set.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def _tiny(name: str, num_layers: int = 8, **kw):
+    from repro.configs.base import get_config, smoke_variant
+
+    cfg = smoke_variant(get_config(name))
+    changes = dict(
+        num_layers=num_layers, d_model=64, num_heads=2, num_kv_heads=2,
+        head_dim=32, d_ff=128 if cfg.d_ff else 0, vocab_size=256,
+    )
+    changes.update(kw)
+    return dataclasses.replace(cfg, **changes)
+
+
+def plan_rows() -> list[dict]:
+    """Schedule/byte-twin metrics of real-model pipeline plans (no jit)."""
+    from repro.core.estimator import dist_comm_bytes
+    from repro.core.simulator import simulate
+    from repro.core.strategy import model_pipeline_graph
+    from repro.dist.compress import compressed_psum_bytes
+    from repro.models import build_model
+    from repro.models.pipeline import make_plan, stage_param_trees
+
+    micro_batch, seq = 2, 16
+    rows = []
+    cases = [
+        ("dense", _tiny("llama3.2-1b"), "1f1b", 4, 8, 1),
+        ("dense", _tiny("llama3.2-1b"), "interleaved_1f1b", 4, 8, 2),
+        ("moe", _tiny("qwen3-moe-235b-a22b"), "gpipe", 4, 8, 1),
+    ]
+    for fam, cfg, sched_name, S, M, v in cases:
+        plan = make_plan(cfg, S, M, schedule=sched_name, vstages=v)
+        tag = f"pipe_{fam}_{sched_name}"
+        g = model_pipeline_graph(cfg, plan.strategy(), micro_batch, seq)
+        res = simulate(
+            g, lambda n: 1.0 if n.kind in ("fwd", "bwd") else 0.0
+        )
+        sch = plan.make_schedule()
+        assert res.makespan == sch.total_ticks(), (tag, res.makespan)
+        rows.append({
+            "name": f"{tag}_ticks", "value": float(res.makespan),
+            "tol_rel": 0.0, "tol_abs": 0.0,
+        })
+        rows.append({
+            "name": f"{tag}_bubble_ticks",
+            "value": float(sch.bubble_ticks(0)),
+            "tol_rel": 0.0, "tol_abs": 0.0,
+        })
+        sim_bytes = sum(
+            dist_comm_bytes(n) for n in g.nodes
+            if n.kind == "collective-permute"
+        )
+        assert sim_bytes == plan.boundary_bytes_per_step(micro_batch, seq)
+        rows.append({
+            "name": f"{tag}_boundary_bytes", "value": float(sim_bytes),
+            "tol_rel": 0.0, "tol_abs": 0.0,
+        })
+        params, _ = build_model(cfg).abstract_params()
+        grad_ar = sum(
+            compressed_psum_bytes(tree, scheme="int8")
+            for tree in stage_param_trees(plan, params)
+        )
+        rows.append({
+            "name": f"{tag}_int8_grad_ar_bytes", "value": float(grad_ar),
+            "tol_rel": 0.0, "tol_abs": 0.0,
+        })
+    # MoE ep_a2a dispatch payload twin
+    from repro.dist.ep_a2a import moe_a2a_bytes
+
+    moe_cfg = _tiny("qwen3-moe-235b-a22b")
+    rows.append({
+        "name": "pipe_moe_a2a_bytes",
+        "value": float(
+            moe_a2a_bytes(moe_cfg.moe, micro_batch * seq, moe_cfg.d_model,
+                          itemsize=4)
+        ),
+        "tol_rel": 0.0, "tol_abs": 0.0,
+    })
+    return rows
+
+
+def execution_rows() -> list[dict]:
+    """Run the real dense transformer through the scheduled executor."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeConfig
+    from repro.models import build_model
+    from repro.models.build import make_concrete_batch
+    from repro.models.pipeline import (
+        make_plan,
+        microbatched_reference,
+        pipeline_loss_and_grads,
+    )
+
+    cfg = _tiny("llama3.2-1b", num_layers=4)
+    shape = ShapeConfig("bench_pipe", 16, 4, "train")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = make_concrete_batch(cfg, shape)
+    mesh = jax.make_mesh(
+        (1,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    plan = make_plan(cfg, 1, 2, schedule="interleaved_1f1b", vstages=2)
+    loss, _metrics, grads = jax.jit(
+        lambda p, b: pipeline_loss_and_grads(plan, p, b, mesh)
+    )(params, batch)
+    ref = microbatched_reference(model, plan.microbatches)
+    ref_loss, ref_grads = jax.value_and_grad(ref)(params, batch)
+    flat_ref = dict(jax.tree_util.tree_leaves_with_path(ref_grads))
+    worst = 0.0
+    for kp, g in jax.tree_util.tree_leaves_with_path(grads):
+        r = flat_ref[kp]
+        d = float(jnp.max(jnp.abs(g - r)))
+        s = float(jnp.max(jnp.abs(r))) + 1e-8
+        worst = max(worst, d / s)
+    return [
+        {
+            # numerics band: BLAS/jax-version drift allowed, divergence not
+            "name": "pipe_exec_loss", "value": float(loss),
+            "tol_rel": 0.02, "tol_abs": 0.0,
+        },
+        {
+            # parity band: worst grad err must stay ~fp32 noise
+            "name": "pipe_exec_grad_rel_err", "value": worst,
+            "tol_rel": 0.0, "tol_abs": 5e-4,
+        },
+    ]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rows = plan_rows()
+    if not smoke:
+        rows.extend(execution_rows())
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="plan/byte-twin rows only (no jit; sub-second)",
+    )
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(f"{r['name']},{r['value']:.6g}")

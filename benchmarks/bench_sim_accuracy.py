@@ -28,7 +28,6 @@ import argparse
 import dataclasses
 import time
 
-import numpy as np
 
 
 def _models():

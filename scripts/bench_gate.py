@@ -1,0 +1,128 @@
+"""Benchmark-regression gate (``scripts/check.sh bench``).
+
+Collects the deterministic benchmark rows —
+``benchmarks/bench_sim_accuracy.py --smoke`` (schedule-layer accuracy) plus
+``benchmarks/bench_pipeline_models.py`` (model-pipeline byte twins and the
+real execution smoke) — into one JSON report, and compares every metric
+against the committed baseline within its tolerance band.
+
+    python scripts/bench_gate.py                      # gate (CI)
+    python scripts/bench_gate.py --smoke              # skip the jit row
+    python scripts/bench_gate.py --update-baseline    # re-pin the baseline
+
+Exit code 1 on any out-of-band metric or on a metric the baseline pins
+that the current run no longer produces.  Metrics new since the baseline
+are reported but do not fail the gate (pin them with --update-baseline).
+The report (default ``BENCH_pr4.json``) is uploaded as a CI artifact so a
+red gate is diagnosable from the workflow page.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_BASELINE = os.path.join(
+    REPO, "benchmarks", "baselines", "bench_baseline.json"
+)
+DEFAULT_OUT = os.path.join(REPO, "BENCH_pr4.json")
+
+
+def collect(smoke: bool) -> dict[str, dict]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    import bench_pipeline_models
+    import bench_sim_accuracy
+
+    metrics: dict[str, dict] = {}
+    # schedule-accuracy rows: DES makespan vs tick-table twin (exact ints;
+    # schedule_rows itself raises on sim-vs-twin drift)
+    for r in bench_sim_accuracy.schedule_rows():
+        metrics[r["name"] + "_ticks"] = {
+            "value": float(r["us_per_call"]), "tol_rel": 0.0, "tol_abs": 0.0,
+        }
+    for r in bench_pipeline_models.run(smoke=smoke):
+        metrics[r["name"]] = {
+            "value": float(r["value"]),
+            "tol_rel": float(r.get("tol_rel", 0.0)),
+            "tol_abs": float(r.get("tol_abs", 0.0)),
+        }
+    return metrics
+
+
+def compare(
+    current: dict[str, dict],
+    baseline: dict[str, dict],
+    allow_missing: bool = False,
+) -> list[str]:
+    failures = []
+    for name, base in sorted(baseline.items()):
+        if name not in current:
+            if allow_missing:
+                # --smoke intentionally skips the execution rows; the full
+                # CI run still fails on pinned-but-missing metrics
+                print(f"[bench-gate] skipped (not produced in this mode): "
+                      f"{name}")
+                continue
+            failures.append(f"{name}: pinned in baseline but not produced")
+            continue
+        cur = current[name]
+        tol = max(
+            float(base.get("tol_abs", 0.0)),
+            float(base.get("tol_rel", 0.0)) * abs(float(base["value"])),
+        )
+        diff = abs(float(cur["value"]) - float(base["value"]))
+        if diff > tol:
+            failures.append(
+                f"{name}: {cur['value']:.6g} vs baseline "
+                f"{base['value']:.6g} (|diff| {diff:.3g} > tol {tol:.3g})"
+            )
+    for name in sorted(set(current) - set(baseline)):
+        print(f"[bench-gate] NEW metric (not gated): {name} = "
+              f"{current[name]['value']:.6g}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip the jit execution row")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args()
+
+    metrics = collect(smoke=args.smoke)
+    report = {"metrics": metrics}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"[bench-gate] wrote {args.out} ({len(metrics)} metrics)")
+
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[bench-gate] baseline updated: {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"[bench-gate] FAIL: no baseline at {args.baseline} "
+              f"(run with --update-baseline to pin one)")
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)["metrics"]
+    failures = compare(metrics, baseline, allow_missing=args.smoke)
+    if failures:
+        print(f"[bench-gate] FAIL ({len(failures)} regressions):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"[bench-gate] OK: no regressions vs the "
+          f"{len(baseline)}-metric baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,28 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate: collection must be clean and the fast suite green
 # (includes the compressed-training parity suite, tests/test_train_compressed.py,
-# and the estimator-determinism check).
-# The slow subprocess tier (forced multi-device hosts, incl. 8-device
-# compressed data-parallel training) runs with: check.sh slow
-# Docs job (markdown links + schedule-accuracy smoke) runs with: check.sh docs
-# Standalone estimator reproducibility gate: check.sh determinism
+# the model-pipeline parity suite, tests/test_model_pipeline.py, and the
+# estimator-determinism check).
+# Modes:
+#   check.sh             fast tier (default)
+#   check.sh slow        subprocess tier (forced multi-device hosts, incl.
+#                        the pipeline launcher on a real 4-stage mesh)
+#   check.sh determinism standalone estimator reproducibility gate
+#   check.sh docs        markdown links + schedule-accuracy smoke
+#   check.sh bench       benchmark-regression gate vs the committed baseline
+#   check.sh lint        ruff (config in pyproject.toml)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# triage header: every CI log starts with the backend the failures ran on
+python - <<'EOF'
+import jax, platform
+print(f"[check] python {platform.python_version()} | jax {jax.__version__} "
+      f"| backend {jax.default_backend()} | devices {jax.device_count()}",
+      flush=True)
+EOF
 
 if [[ "${1:-}" == "slow" ]]; then
     exec python -m pytest -q -m slow
@@ -26,6 +39,21 @@ if [[ "${1:-}" == "docs" ]]; then
     # markdown link integrity + the schedule-accuracy smoke rows
     python scripts/check_docs.py
     exec python benchmarks/bench_sim_accuracy.py --smoke
+fi
+
+if [[ "${1:-}" == "bench" ]]; then
+    # deterministic sim-vs-real metrics vs the committed baseline; writes
+    # BENCH_pr4.json (uploaded as a CI artifact)
+    exec python scripts/bench_gate.py "${@:2}"
+fi
+
+if [[ "${1:-}" == "lint" ]]; then
+    if ! command -v ruff >/dev/null 2>&1; then
+        echo "[check] lint skipped: ruff not installed" \
+             "(pip install -e '.[lint]')"
+        exit 0
+    fi
+    exec ruff check src tests benchmarks scripts examples
 fi
 
 # fail fast on import-error walls before running anything

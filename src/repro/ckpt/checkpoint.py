@@ -32,7 +32,6 @@ import json
 import os
 import re
 import shutil
-import tempfile
 import threading
 from typing import Any, Optional
 

@@ -12,7 +12,7 @@ are global and paired with per-arch applicability rules (see
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 

@@ -13,8 +13,7 @@ slow down one stage by a factor — which drives the backup-step policy in
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.configs.base import ArchConfig

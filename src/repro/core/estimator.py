@@ -154,10 +154,13 @@ def dist_comm_bytes(node: OpNode) -> float:
     compressed gradient all-reduce (see
     ``repro.core.strategy.pipeline_graph``), or
     ``{"moe_a2a": {...}}`` on an expert-parallel all-to-all (see
-    ``repro.core.strategy.moe_a2a_node_meta``).  Unannotated nodes — e.g.
-    pipeline boundary sends, whose ``comm_bytes`` already equal the exact
-    per-hop payload the scheduled executor ppermutes — pass through
-    unchanged, so estimators stay backward-compatible.
+    ``repro.core.strategy.moe_a2a_node_meta``), or ``{"pp_hop": {"shape",
+    "dtype"}}`` on a model-derived pipeline boundary send (resolved through
+    ``repro.dist.pp.boundary_bytes``, see
+    ``repro.core.strategy.model_pipeline_graph``).  Unannotated nodes —
+    e.g. synthetic pipeline boundary sends, whose ``comm_bytes`` already
+    equal the exact per-hop payload the scheduled executor ppermutes —
+    pass through unchanged, so estimators stay backward-compatible.
     """
     scheme = node.meta.get("compression")
     if scheme and scheme != "none":
@@ -183,6 +186,14 @@ def dist_comm_bytes(node: OpNode) -> float:
         from repro.dist.ep_a2a import a2a_payload_bytes
 
         return a2a_payload_bytes(**a2a)
+    hop = node.meta.get("pp_hop")
+    if hop:
+        # model-derived pipeline boundary send: re-derive the payload from
+        # the executor's ppermute byte twin (shape + dtype of the microbatch
+        # activation), so the byte source stays the dist layer
+        from repro.dist.pp import boundary_bytes
+
+        return boundary_bytes(hop["shape"], hop["dtype"])
     return node.comm_bytes
 
 

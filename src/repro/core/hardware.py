@@ -10,7 +10,7 @@ and a flat DCN hop for the ``pod`` axis.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

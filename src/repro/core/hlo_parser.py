@@ -31,7 +31,7 @@ import re
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.graph import DataflowGraph, OpNode
+from repro.core.graph import DataflowGraph
 
 DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,

@@ -10,7 +10,6 @@ and insert the measurement so the *next* simulation is a pure DB hit.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax

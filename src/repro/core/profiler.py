@@ -252,7 +252,6 @@ class OfflineProfiler:
         sizes = _grid(sizes or [2**p for p in range(12, 24, 2)], values_per_arg)
         mesh = make_mesh((ndev,), ("x",), axis_types=(AxisType.Auto,))
         from jax.sharding import NamedSharding, PartitionSpec as P
-        import functools
 
         nb = np.dtype(self.dtype).itemsize
         count = 0

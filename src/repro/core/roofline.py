@@ -15,11 +15,11 @@ MODEL_FLOPS (analytic, global) is divided by the chip count.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.hardware import PlatformSpec, TPU_V5E, collective_time, wire_bytes
+from repro.core.hardware import PlatformSpec, TPU_V5E, collective_time
 
 
 @dataclass

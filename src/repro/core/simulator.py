@@ -24,8 +24,8 @@ paper's general model.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable
 
 from repro.core.graph import DataflowGraph, OpNode
 

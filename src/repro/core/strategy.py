@@ -22,7 +22,8 @@ DES timeline and the shard_map executor realize the identical schedule
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+from typing import Optional
 
 from repro.core.graph import DataflowGraph
 
@@ -125,6 +126,10 @@ def pipeline_graph(
     n_layers: int,
     cost: LayerCost,
     strategy: Strategy,
+    hop_meta_extra: Optional[dict] = None,
+    grad_bytes_per_stage: Optional[list[float]] = None,
+    grad_meta_per_stage: Optional[list[dict]] = None,
+    moe_a2a: Optional[dict] = None,
 ) -> DataflowGraph:
     """Build the fwd/bwd microbatch DAG for a pipeline-parallel step.
 
@@ -143,6 +148,17 @@ def pipeline_graph(
     GPipe's flush, 1F1B's ``S - s`` in-flight window, and interleaving all
     emerge from the table rather than from schedule-specific dependency
     arithmetic.
+
+    The optional keyword arguments let a *model-derived* partition
+    (:func:`model_pipeline_graph`) refine the synthetic defaults without a
+    second builder: ``hop_meta_extra`` merges into every boundary-send
+    node's meta (e.g. the ``pp_hop`` payload annotation
+    ``repro.core.estimator.dist_comm_bytes`` resolves through the executor
+    byte twin), ``grad_bytes_per_stage`` / ``grad_meta_per_stage`` replace
+    the uniform per-stage gradient all-reduce payload with the partition's
+    exact per-stage trees, and ``moe_a2a`` (``{"meta": .., "comm_bytes":
+    .., "group_size": .., "layers_per_vstage": [..]}``) attaches one
+    expert-dispatch all-to-all node per (MoE layer, fwd step).
     """
     from repro.dist.schedules import FWD
 
@@ -160,10 +176,14 @@ def pipeline_graph(
     bwd_flops = fwd_flops * cost.bwd_multiplier
     bwd_bytes = fwd_bytes * cost.bwd_multiplier
     # boundary sends carry the exact per-hop payload the executor ppermutes;
-    # no meta annotation needed — dist_comm_bytes passes comm_bytes through,
-    # and parity with the schedule/executor twins is asserted in
-    # tests/test_schedule_parity.py
+    # dist_comm_bytes passes comm_bytes through (or, with a pp_hop
+    # annotation from hop_meta_extra, re-derives it from the executor byte
+    # twin) — parity is asserted in tests/test_schedule_parity.py and
+    # tests/test_model_pipeline.py
     hop_meta = {"transfer": "pp_boundary"}
+    if hop_meta_extra:
+        hop_meta.update(hop_meta_extra)
+    a2a_layers = (moe_a2a or {}).get("layers_per_vstage")
 
     prev_on_device: dict[int, str] = {}
     for step in schedule.steps():
@@ -186,6 +206,17 @@ def pipeline_graph(
             device=f"stage{s}",
         )
         prev_on_device[s] = step.name
+        if step.phase == FWD and a2a_layers and a2a_layers[k]:
+            # expert-parallel dispatch a2a of every MoE block in this
+            # chunk, priced via the moe_a2a annotation's dist-layer twin
+            for i in range(a2a_layers[k]):
+                b.add(
+                    f"a2a{k}.{m}.{i}", "all-to-all", [step.name],
+                    comm_bytes=moe_a2a["comm_bytes"],
+                    group_size=moe_a2a["group_size"],
+                    link_kind="ici", device=f"link:ep{s}",
+                    meta=dict(moe_a2a["meta"]),
+                )
         if step.phase == FWD and k < V - 1:
             b.add(
                 f"sendF{k}.{m}", "collective-permute", [step.name],
@@ -200,7 +231,9 @@ def pipeline_graph(
                 link_kind="ici", device="link:pp",
                 meta=dict(hop_meta),
             )
-    if strategy.dp > 1 and cost.grad_bytes > 0:
+    if strategy.dp > 1 and (
+        cost.grad_bytes > 0 or grad_bytes_per_stage is not None
+    ):
         # comm_bytes stays the RAW f32 payload; the compression annotation is
         # resolved to the dist layer's actual wire bytes at estimation time
         # (repro.core.estimator.dist_comm_bytes), keeping the graph
@@ -213,14 +246,121 @@ def pipeline_graph(
                 "n_tensors": int(cost.grad_tensors),
             }
         for s in range(S):
+            s_bytes = cost.grad_bytes
+            s_meta = dict(meta)
+            if grad_bytes_per_stage is not None:
+                s_bytes = grad_bytes_per_stage[s]
+            if grad_meta_per_stage is not None:
+                s_meta = dict(grad_meta_per_stage[s])
             b.add(
                 f"gradAR{s}", "all-reduce",
                 [f"B{k}.{m}" for k in range(s, V, S) for m in range(M)],
-                comm_bytes=cost.grad_bytes, group_size=strategy.dp,
+                comm_bytes=s_bytes, group_size=strategy.dp,
                 link_kind="ici", device=f"link:dp{s}",
-                meta=dict(meta),
+                meta=s_meta,
             )
     return b.build()
+
+
+def model_pipeline_graph(
+    cfg,
+    strategy: Strategy,
+    micro_batch: int,
+    seq: int,
+    params=None,
+) -> DataflowGraph:
+    """The pipeline DAG of a REAL model partition — the sim side of
+    ``repro.models.pipeline``.
+
+    Same step table, same builder as :func:`pipeline_graph`, but every
+    comm annotation is derived from the partition the executor actually
+    runs:
+
+      * boundary sends carry ``pp_hop`` meta (the (B, S, D) microbatch
+        activation in the config's compute dtype) so the estimator prices
+        them through ``repro.dist.pp.boundary_bytes`` — the executor's
+        ppermute payload twin;
+      * ``dp > 1`` gradient all-reduces get the exact per-leaf element
+        counts of each stage's parameter tree
+        (``repro.models.pipeline.stage_param_trees``), matching
+        ``repro.dist.compress.compressed_psum_bytes`` leaf for leaf;
+      * ``ep_a2a`` MoE configs attach one dispatch all-to-all per
+        (MoE layer, fwd step) annotated for
+        ``repro.dist.ep_a2a.a2a_payload_bytes``.
+
+    ``params`` may be the model's param pytree (or ShapeDtypeStructs); when
+    None the abstract params are derived from the config.
+    """
+    from repro.models.build import build_model
+    from repro.models.pipeline import (
+        make_plan,
+        model_layer_cost,
+        moe_layers_per_vstage,
+        stage_param_trees,
+    )
+
+    plan = make_plan(
+        cfg, strategy.pp, strategy.microbatches,
+        schedule=strategy.schedule, vstages=strategy.vstages,
+    )
+    cost = model_layer_cost(cfg, micro_batch, seq, tp=strategy.tp)
+    hop_meta_extra = {
+        "pp_hop": {
+            "shape": list(plan.act_shape(micro_batch, seq)),
+            "dtype": str(cfg.compute_dtype),
+        }
+    }
+
+    grad_bytes_per_stage = grad_meta_per_stage = None
+    if strategy.dp > 1:
+        from repro.dist.compress import leaf_elems
+
+        if params is None:
+            params, _axes = build_model(cfg).abstract_params()
+        grad_bytes_per_stage, grad_meta_per_stage = [], []
+        for tree in stage_param_trees(plan, params):
+            elems = leaf_elems(tree)
+            grad_bytes_per_stage.append(4.0 * sum(elems))
+            grad_meta_per_stage.append(
+                grad_allreduce_node_meta(elems, strategy.compression)
+            )
+
+    moe_a2a = None
+    # price the expert-dispatch a2a only when the strategy has an
+    # expert-parallel width to dispatch over (explicit ep, or the dp axis
+    # the executable repro.dist.ep_a2a layout shards experts over) — a
+    # dp=1/ep=1 plan has no a2a to execute, so none is priced.  Note the
+    # scheduled pipeline executor itself runs the capacity-parity einsum
+    # MoE math (no mesh ctx inside shard_map); the a2a's executable
+    # counterpart is the GSPMD-path repro.dist.ep_a2a.moe_ffn_ep_a2a.
+    if cfg.moe is not None and cfg.moe.impl == "ep_a2a" and (
+        strategy.ep > 1 or strategy.dp > 1
+    ):
+        act_itemsize = 4 if str(cfg.compute_dtype) == "float32" else 2
+        tokens_local = micro_batch * seq
+        moe_a2a = {
+            "meta": moe_a2a_node_meta(
+                cfg.moe, tokens_local, cfg.d_model, itemsize=act_itemsize
+            ),
+            "comm_bytes": float(
+                tokens_local * cfg.d_model * act_itemsize
+            ),
+            # device group of the a2a: the explicit-EP layout shards
+            # experts over the data axis (repro.dist.ep_a2a), so an
+            # unspecified ep width falls back to the dp width
+            "group_size": (
+                strategy.ep if strategy.ep > 1 else strategy.dp
+            ),
+            "layers_per_vstage": moe_layers_per_vstage(plan),
+        }
+
+    return pipeline_graph(
+        cfg.num_layers, cost, strategy,
+        hop_meta_extra=hop_meta_extra,
+        grad_bytes_per_stage=grad_bytes_per_stage,
+        grad_meta_per_stage=grad_meta_per_stage,
+        moe_a2a=moe_a2a,
+    )
 
 
 def grad_allreduce_node_meta(grads, scheme: str) -> dict:

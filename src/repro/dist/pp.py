@@ -11,6 +11,17 @@ activation/cotangent exchanges at every virtual-stage boundary.  GPipe,
 1F1B, and interleaved-1F1B all execute through it, v chunks per device and
 all.
 
+The scheduled executor is *staged*: besides the homogeneous layer stack it
+takes an optional ``first_fn`` (applied by the first virtual stage before
+its layer chunk — a real model's token embedding) and a parameterized
+``loss_fn`` (applied by the last virtual stage — final norm + lm head +
+cross-entropy), and every layer may emit an auxiliary scalar loss (MoE
+router balance) whose cotangent is seeded locally in the scheduled
+backward.  ``repro.models.pipeline`` uses this to run the *actual*
+transformer/MoE block math under any schedule; ``make_scheduled_body``
+exposes the tick loop for embedding in a larger shard_map (the pp x dp
+train step in ``repro.train.step``).
+
 ``pipeline_step_shard_map`` — the original forward wavefront (backward via
 autodiff), kept as the cheap path when only outputs are needed; its forward
 microbatch order coincides with every supported schedule's.
@@ -105,97 +116,151 @@ def pipeline_step_shard_map(
 # ---------------------------------------------------------------------------
 
 
-def _device_major(leaf, n_stages: int, vstages: int):
+def _device_major(leaf, n_stages: int, vstages: int, axis: int = 0):
     """(L, ...) layer stack -> (S*v, L/(S*v), ...) with device-major rows.
 
     Row ``s*v + c`` holds the contiguous layer block of virtual stage
     ``k = s + c*S`` — so shard_map's ``P(stage)`` split hands device ``s``
-    exactly its ``v`` chunks, in local-chunk order.
+    exactly its ``v`` chunks, in local-chunk order.  ``axis`` selects the
+    layer dimension (residual trees carry a leading replica axis).
     """
-    L = int(jnp.shape(leaf)[0])
+    x = jnp.moveaxis(leaf, axis, 0)
+    L = int(jnp.shape(x)[0])
     V = n_stages * vstages
     per_chunk = L // V
-    resh = jnp.reshape(leaf, (vstages, n_stages, per_chunk) + leaf.shape[1:])
-    return jnp.reshape(
-        jnp.moveaxis(resh, 0, 1), (V, per_chunk) + leaf.shape[1:]
+    resh = jnp.reshape(x, (vstages, n_stages, per_chunk) + x.shape[1:])
+    out = jnp.reshape(
+        jnp.moveaxis(resh, 0, 1), (V, per_chunk) + x.shape[1:]
     )
+    return jnp.moveaxis(out, (0, 1), (axis, axis + 1))
 
 
-def _layer_major(leaf, n_stages: int, vstages: int):
+def _layer_major(leaf, n_stages: int, vstages: int, axis: int = 0):
     """Inverse of :func:`_device_major`: (S*v, Lc, ...) -> (L, ...)."""
+    x = jnp.moveaxis(leaf, (axis, axis + 1), (0, 1))
     V = n_stages * vstages
-    per_chunk = int(jnp.shape(leaf)[1])
+    per_chunk = int(jnp.shape(x)[1])
     resh = jnp.reshape(
-        leaf, (n_stages, vstages, per_chunk) + leaf.shape[2:]
+        x, (n_stages, vstages, per_chunk) + x.shape[2:]
     )
-    return jnp.reshape(
-        jnp.moveaxis(resh, 0, 1), (V * per_chunk,) + leaf.shape[2:]
+    out = jnp.reshape(
+        jnp.moveaxis(resh, 0, 1), (V * per_chunk,) + x.shape[2:]
     )
+    return jnp.moveaxis(out, 0, axis)
 
 
-def arrange_params_for_schedule(params, schedule: PipelineSchedule):
+def arrange_params_for_schedule(params, schedule: PipelineSchedule, axis=0):
     """Reorder a stacked-layer pytree into the executor's device-major rows."""
     return jax.tree_util.tree_map(
-        lambda p: _device_major(p, schedule.n_stages, schedule.vstages), params
+        lambda p: _device_major(p, schedule.n_stages, schedule.vstages, axis),
+        params,
     )
 
 
-def unarrange_params_for_schedule(tree, schedule: PipelineSchedule):
+def unarrange_params_for_schedule(tree, schedule: PipelineSchedule, axis=0):
     """Map executor-layout leaves (e.g. grads) back to layer-major (L, ...)."""
     return jax.tree_util.tree_map(
-        lambda p: _layer_major(p, schedule.n_stages, schedule.vstages), tree
+        lambda p: _layer_major(p, schedule.n_stages, schedule.vstages, axis),
+        tree,
     )
 
 
-def pipeline_schedule_shard_map(
-    params,
-    xs: jax.Array,
-    layer_fn,
-    mesh: Mesh,
+# Extended per-tick actions: the plan's base actions split by whether the
+# step's virtual stage is the first (runs ``first_fn`` on raw model inputs)
+# and/or the last (seeds the backward from ``loss_fn``'s vjp).  V == 1
+# (single virtual stage) hits the combined FIRST_LAST branch.
+(
+    X_NOOP,
+    X_FWD,
+    X_FWD_FIRST,
+    X_BWD,
+    X_BWD_LAST,
+    X_BWD_FIRST,
+    X_BWD_FIRST_LAST,
+) = range(7)
+
+
+def _extended_actions(plan) -> list[list[int]]:
+    from repro.dist.schedules import DO_BWD, DO_BWD_LAST, DO_FWD, NOOP
+
+    out = []
+    for t in range(plan.n_ticks):
+        row = []
+        for s in range(len(plan.action[t])):
+            a, first = plan.action[t][s], plan.is_first[t][s]
+            if a == NOOP:
+                row.append(X_NOOP)
+            elif a == DO_FWD:
+                row.append(X_FWD_FIRST if first else X_FWD)
+            elif a == DO_BWD:
+                row.append(X_BWD_FIRST if first else X_BWD)
+            else:
+                assert a == DO_BWD_LAST
+                row.append(X_BWD_FIRST_LAST if first else X_BWD_LAST)
+        out.append(row)
+    return out
+
+
+def _stage_apply_aux(params_local, x, layer_fn):
+    """Scan this stage's layers; layers emit ``(h, aux)`` (aux: f32 scalar
+    contribution to the total loss, e.g. MoE router balance)."""
+
+    def body(carry, p_layer):
+        h, aux = carry
+        h2, a = layer_fn(p_layer, h)
+        return (h2, aux + jnp.asarray(a, jnp.float32)), None
+
+    (out, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params_local
+    )
+    return out, aux
+
+
+def make_scheduled_body(
     schedule: PipelineSchedule,
+    layer_fn,
+    act_sds,
+    first_fn=None,
     loss_fn=None,
     axis_name: str = "stage",
 ):
-    """Execute a pipeline step table — forward and scheduled backward.
+    """Compile a schedule into the per-device tick loop.
 
-    One tick per row of the schedule's :class:`ExecutorPlan`: each device
-    receives this tick's ppermuted activation/cotangent (scattered into its
-    per-(chunk, microbatch) tables), then ``lax.switch``es on its scheduled
-    action — a chunk forward (``_stage_apply``) or an explicit chunk
-    backward (``jax.vjp`` at the stored input activation), exactly the
-    F/B nodes the simulator times for the same schedule.
+    Returns ``body(blocks_local, first_params, last_params, xs, loss_inputs)
+    -> (loss, aux, outs, gblocks_local, gfirst, glast)`` meant to run inside
+    a ``shard_map`` whose ``axis_name`` axis has ``schedule.n_stages``
+    devices (possibly alongside other axes — the pp x dp train step).
 
     Args:
-      params: pytree of per-layer stacked leaves, leading dim L divisible by
-        ``S * v``; layer-major (the natural model layout).
-      xs: microbatched inputs ``(M, batch, d)``, replicated.
-      layer_fn: ``(per_layer_params, activation) -> activation``.
-      mesh: mesh containing ``axis_name`` of size ``schedule.n_stages``.
-      schedule: a validated :class:`PipelineSchedule`.
-      loss_fn: scalar per-microbatch loss on the final-stage output; the
-        backward of the last virtual stage is seeded with its vjp.  Default
-        ``0.5 * sum(y**2)`` (cotangent ``y``).
+      layer_fn: ``(per_layer_params, h) -> (h, aux)`` — one layer of the
+        stack; ``aux`` is that layer's scalar contribution to the *total*
+        loss (0.0 for plain stacks), whose cotangent is seeded locally with
+        1.0 in the scheduled backward.
+      act_sds: ShapeDtypeStruct of one microbatch's activation (the wire
+        payload — ``boundary_bytes(act_sds.shape, act_sds.dtype)`` is the
+        per-hop byte twin).
+      first_fn: ``(first_params, xs_m) -> h`` applied by the first virtual
+        stage only (embedding).  None: identity on the ``xs`` leaf.
+      loss_fn: ``(last_params, y, loss_inputs_m) -> scalar`` contribution of
+        one microbatch to the total loss, evaluated (and vjp-seeded) by the
+        last virtual stage only.  Default ``0.5 * sum(y**2)``.
 
-    Returns ``(loss, outs, grads)``: summed microbatch loss, final-stage
-    outputs ``(M, batch, d)`` (replicated), and parameter gradients in the
-    original layer-major layout.
+    Inside the loop, ``loss``/``aux``/``outs`` and the first/last-stage
+    parameter gradients are psum-replicated over ``axis_name``; block
+    gradients stay per-device (device-major local rows).
     """
-    S = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
-    assert S == schedule.n_stages, (S, schedule.n_stages)
-    M, v, V = schedule.n_microbatches, schedule.vstages, schedule.n_vstages
-    assert xs.shape[0] == M, (xs.shape, M)
-    lead = {int(jnp.shape(p)[0]) for p in jax.tree_util.tree_leaves(params)}
-    assert len(lead) == 1, f"per-layer leaves disagree on layer count: {lead}"
-    (L,) = lead
-    assert L % V == 0, f"layers {L} % virtual stages {V} != 0"
+    if first_fn is None:
+        first_fn = lambda fp, x: x  # noqa: E731
     if loss_fn is None:
-        loss_fn = lambda y: 0.5 * jnp.sum(y * y)  # noqa: E731
+        loss_fn = lambda lp, y, lm: 0.5 * jnp.sum(y * y)  # noqa: E731
 
     plan = build_executor_plan(schedule)
+    S = schedule.n_stages
+    M, v = schedule.n_microbatches, schedule.vstages
     # dense [n_ticks][n_stages] int tables -> scanned tick-wise, so the
     # traced program is O(1) in tick count (one switch body, not T of them)
     rows = {
-        "act": jnp.asarray(plan.action),
+        "act": jnp.asarray(_extended_actions(plan)),
         "chunk": jnp.asarray(plan.chunk),
         "mb": jnp.asarray(plan.microbatch),
         "last": jnp.asarray(plan.is_last),
@@ -206,29 +271,39 @@ def pipeline_schedule_shard_map(
         "rbc": jnp.asarray(plan.recv_bwd_chunk),
         "rbm": jnp.asarray(plan.recv_bwd_mb),
     }
-
     perm_f = [(i, (i + 1) % S) for i in range(S)]
     perm_b = [(i, (i - 1) % S) for i in range(S)]
+    one = jnp.ones((), jnp.float32)
 
-    def chunk_apply(p_local, c, x):
-        p_c = jax.tree_util.tree_map(lambda leaf: leaf[c], p_local)
-        return _stage_apply(p_c, x, layer_fn)
-
-    def body(params_local, xs_full):
+    def body(blocks_local, first_params, last_params, xs, loss_inputs):
         s = jax.lax.axis_index(axis_name)
-        mb_shape = xs_full.shape[1:]
-        x_in = jnp.zeros((v, M) + mb_shape, xs_full.dtype)
-        # virtual stage 0 = (device 0, chunk 0): its inputs are the data
-        x_in = x_in.at[0].set(jnp.where(s == 0, xs_full, 0.0))
+        mb_shape, mb_dtype = tuple(act_sds.shape), act_sds.dtype
+
+        def chunk_apply(bl, c, x):
+            p_c = jax.tree_util.tree_map(lambda leaf: leaf[c], bl)
+            return _stage_apply_aux(p_c, x, layer_fn)
+
+        def xs_at(m):
+            return jax.tree_util.tree_map(lambda a: a[m], xs)
+
+        def loss_at(m):
+            if loss_inputs is None:
+                return None
+            return jax.tree_util.tree_map(lambda a: a[m], loss_inputs)
+
+        x_in = jnp.zeros((v, M) + mb_shape, mb_dtype)
         g_in = jnp.zeros_like(x_in)
-        outs = jnp.zeros_like(xs_full)
-        gparams = jax.tree_util.tree_map(jnp.zeros_like, params_local)
+        outs = jnp.zeros((M,) + mb_shape, mb_dtype)
+        gblocks = jax.tree_util.tree_map(jnp.zeros_like, blocks_local)
+        gfirst = jax.tree_util.tree_map(jnp.zeros_like, first_params)
+        glast = jax.tree_util.tree_map(jnp.zeros_like, last_params)
         loss = jnp.zeros((), jnp.float32)
-        fwd_snd = jnp.zeros(mb_shape, xs_full.dtype)
-        bwd_snd = jnp.zeros(mb_shape, xs_full.dtype)
+        aux = jnp.zeros((), jnp.float32)
+        snd = jnp.zeros(mb_shape, mb_dtype)
 
         def tick(carry, row):
-            x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd = carry
+            (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+             fwd_snd, bwd_snd) = carry
             # 1. exchange: every tick ships both registers; the static plan
             # says whether this device's arrivals mean anything
             inc_f = jax.lax.ppermute(fwd_snd, axis_name, perm_f)
@@ -245,66 +320,239 @@ def pipeline_schedule_shard_map(
             # 2. execute this device's scheduled step
             c, m = row["chunk"][s], row["mb"][s]
             is_last = row["last"][s] > 0
-            op = (x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd,
-                  c, m, is_last)
+            op = (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                  fwd_snd, bwd_snd, c, m, is_last)
 
             def do_noop(op):
-                return op[:7]
+                return op[:10]
+
+            def fwd_step(op, x_of):
+                (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                 _, bwd_snd, c, m, is_last) = op
+                y, a = chunk_apply(blocks_local, c, x_of(c, m))
+                outs = outs.at[m].set(jnp.where(is_last, y, outs[m]))
+                return (x_in, g_in, outs, gblocks, gfirst, glast, loss,
+                        aux + a, y, bwd_snd)
 
             def do_fwd(op):
-                x_in, g_in, outs, gparams, loss, _, bwd_snd, c, m, is_last = op
-                y = chunk_apply(params_local, c, x_in[c, m])
-                outs = outs.at[m].set(jnp.where(is_last, y, outs[m]))
-                return (x_in, g_in, outs, gparams, loss, y, bwd_snd)
+                return fwd_step(op, lambda c, m: op[0][c, m])
 
-            def bwd_step(op, cotangent_of):
-                x_in, g_in, outs, gparams, loss, fwd_snd, _, c, m, _l = op
-                y, vjp_fn = jax.vjp(
-                    lambda p, x: chunk_apply(p, c, x), params_local, x_in[c, m]
+            def do_fwd_first(op):
+                # first virtual stage: inputs come from the data, through
+                # first_fn (embedding), not off the wire
+                m = op[11]
+                return fwd_step(
+                    op, lambda c, _m: first_fn(first_params, xs_at(m))
                 )
-                g, dloss = cotangent_of(y, g_in[c, m])
-                dparams, dx = vjp_fn(g)
-                gparams = jax.tree_util.tree_map(jnp.add, gparams, dparams)
-                return (x_in, g_in, outs, gparams, loss + dloss, fwd_snd, dx)
 
             def do_bwd(op):
-                # interior virtual stage: cotangent arrived over the wire
-                return bwd_step(op, lambda y, g_recv: (g_recv, 0.0))
+                # interior virtual stage: cotangent arrived over the wire;
+                # each layer's aux output is seeded with cotangent 1.0
+                (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                 fwd_snd, _, c, m, _l) = op
+                _y, vjp_fn = jax.vjp(
+                    lambda bl, x: chunk_apply(bl, c, x),
+                    blocks_local, x_in[c, m],
+                )
+                db, dx = vjp_fn((g_in[c, m], one))
+                gblocks = jax.tree_util.tree_map(jnp.add, gblocks, db)
+                return (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                        fwd_snd, dx)
 
             def do_bwd_last(op):
-                # loss boundary: seed the cotangent from loss_fn's vjp —
-                # only this branch ever pays the loss evaluation
-                def seed(y, g_recv):
-                    lval, lvjp = jax.vjp(loss_fn, y)
-                    return (
-                        lvjp(jnp.ones_like(lval))[0],
-                        lval.astype(jnp.float32),
-                    )
+                # loss boundary: the cotangent is seeded from loss_fn's vjp
+                # (w.r.t. the last-stage params too) — only this branch ever
+                # pays the loss evaluation
+                (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                 fwd_snd, _, c, m, _l) = op
 
-                return bwd_step(op, seed)
+                def f(bl, lp, x):
+                    y, a = chunk_apply(bl, c, x)
+                    lval = loss_fn(lp, y, loss_at(m))
+                    return lval + a, lval
+
+                (_t, vjp_fn, lval) = jax.vjp(
+                    f, blocks_local, last_params, x_in[c, m], has_aux=True
+                )
+                db, dl, dx = vjp_fn(one)
+                gblocks = jax.tree_util.tree_map(jnp.add, gblocks, db)
+                glast = jax.tree_util.tree_map(jnp.add, glast, dl)
+                return (x_in, g_in, outs, gblocks, gfirst, glast,
+                        loss + lval, aux, fwd_snd, dx)
+
+            def do_bwd_first(op):
+                (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                 fwd_snd, bwd_snd, c, m, _l) = op
+
+                def f(bl, fp):
+                    return chunk_apply(bl, c, first_fn(fp, xs_at(m)))
+
+                _y, vjp_fn = jax.vjp(f, blocks_local, first_params)
+                db, df = vjp_fn((g_in[c, m], one))
+                gblocks = jax.tree_util.tree_map(jnp.add, gblocks, db)
+                gfirst = jax.tree_util.tree_map(jnp.add, gfirst, df)
+                return (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                        fwd_snd, jnp.zeros(mb_shape, mb_dtype))
+
+            def do_bwd_first_last(op):
+                # V == 1: one virtual stage is both embed and loss boundary
+                (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                 fwd_snd, bwd_snd, c, m, _l) = op
+
+                def f(bl, fp, lp):
+                    y, a = chunk_apply(bl, c, first_fn(fp, xs_at(m)))
+                    lval = loss_fn(lp, y, loss_at(m))
+                    return lval + a, lval
+
+                (_t, vjp_fn, lval) = jax.vjp(
+                    f, blocks_local, first_params, last_params, has_aux=True
+                )
+                db, df, dl = vjp_fn(one)
+                gblocks = jax.tree_util.tree_map(jnp.add, gblocks, db)
+                gfirst = jax.tree_util.tree_map(jnp.add, gfirst, df)
+                glast = jax.tree_util.tree_map(jnp.add, glast, dl)
+                return (x_in, g_in, outs, gblocks, gfirst, glast,
+                        loss + lval, aux, fwd_snd,
+                        jnp.zeros(mb_shape, mb_dtype))
 
             carry = jax.lax.switch(
-                row["act"][s], (do_noop, do_fwd, do_bwd, do_bwd_last), op
+                row["act"][s],
+                (do_noop, do_fwd, do_fwd_first, do_bwd, do_bwd_last,
+                 do_bwd_first, do_bwd_first_last),
+                op,
             )
             return carry, None
 
-        carry = (x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd)
+        carry = (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
+                 snd, snd)
         carry, _ = jax.lax.scan(tick, carry, rows)
-        x_in, g_in, outs, gparams, loss, fwd_snd, bwd_snd = carry
+        (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux, _f, _b) = carry
 
-        # outs/loss are real only on the device owning the last virtual
-        # stage (always rank S-1); psum replicates them
-        return jax.lax.psum(loss, axis_name), jax.lax.psum(outs, axis_name), gparams
+        # loss/outs are real only on the device owning the last virtual
+        # stage, aux/gfirst/glast only where their steps ran; psum
+        # replicates/accumulates them across the stage axis
+        return (
+            jax.lax.psum(loss, axis_name),
+            jax.lax.psum(aux, axis_name),
+            jax.lax.psum(outs, axis_name),
+            gblocks,
+            jax.tree_util.tree_map(
+                lambda g: jax.lax.psum(g, axis_name), gfirst
+            ),
+            jax.tree_util.tree_map(
+                lambda g: jax.lax.psum(g, axis_name), glast
+            ),
+        )
 
-    arranged = arrange_params_for_schedule(params, schedule)
-    loss, outs, gparams = shard_map(
+    return body
+
+
+def pipeline_stage_shard_map(
+    first_params,
+    block_params,
+    last_params,
+    xs,
+    loss_inputs,
+    layer_fn,
+    mesh: Mesh,
+    schedule: PipelineSchedule,
+    first_fn=None,
+    loss_fn=None,
+    axis_name: str = "stage",
+):
+    """Execute a staged pipeline step table — forward and scheduled backward.
+
+    The general entry point behind :func:`pipeline_schedule_shard_map`:
+    ``first_fn(first_params, xs_m)`` feeds the first virtual stage, the
+    layer stack (``block_params``: layer-major stacked leaves, leading dim
+    divisible by ``S * v``) runs one ``layer_fn`` per layer, and
+    ``loss_fn(last_params, y, loss_inputs_m)`` closes the last virtual
+    stage, seeding the scheduled backward.  See :func:`make_scheduled_body`
+    for the callable contracts.
+
+    Returns ``(loss, aux, outs, (gfirst, gblocks, glast))`` with ``loss``
+    the summed microbatch loss contributions, ``aux`` the summed per-layer
+    auxiliary losses, and ``gblocks`` back in layer-major layout.
+    """
+    S = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+    assert S == schedule.n_stages, (S, schedule.n_stages)
+    M, V = schedule.n_microbatches, schedule.n_vstages
+    lead = {
+        int(jnp.shape(p)[0]) for p in jax.tree_util.tree_leaves(block_params)
+    }
+    assert len(lead) == 1, f"per-layer leaves disagree on layer count: {lead}"
+    (L,) = lead
+    assert L % V == 0, f"layers {L} % virtual stages {V} != 0"
+    for leaf in jax.tree_util.tree_leaves(xs):
+        assert int(jnp.shape(leaf)[0]) == M, (jnp.shape(leaf), M)
+
+    _first = first_fn if first_fn is not None else (lambda fp, x: x)
+    xs0 = jax.tree_util.tree_map(lambda a: a[0], xs)
+    act_sds = jax.eval_shape(_first, first_params, xs0)
+    assert hasattr(act_sds, "shape"), (
+        "first_fn must return a single activation array"
+    )
+
+    body = make_scheduled_body(
+        schedule, layer_fn, act_sds,
+        first_fn=first_fn, loss_fn=loss_fn, axis_name=axis_name,
+    )
+    arranged = arrange_params_for_schedule(block_params, schedule)
+    loss, aux, outs, gblocks, gfirst, glast = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(axis_name), P()),
-        out_specs=(P(), P(), P(axis_name)),
+        in_specs=(P(axis_name), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(axis_name), P(), P()),
         check_vma=False,
-    )(arranged, xs)
-    return loss, outs, unarrange_params_for_schedule(gparams, schedule)
+    )(arranged, first_params, last_params, xs, loss_inputs)
+    gblocks = unarrange_params_for_schedule(gblocks, schedule)
+    return loss, aux, outs, (gfirst, gblocks, glast)
+
+
+def pipeline_schedule_shard_map(
+    params,
+    xs: jax.Array,
+    layer_fn,
+    mesh: Mesh,
+    schedule: PipelineSchedule,
+    loss_fn=None,
+    axis_name: str = "stage",
+):
+    """Execute a pipeline step table — forward and scheduled backward.
+
+    One tick per row of the schedule's :class:`ExecutorPlan`: each device
+    receives this tick's ppermuted activation/cotangent (scattered into its
+    per-(chunk, microbatch) tables), then ``lax.switch``es on its scheduled
+    action — a chunk forward or an explicit chunk backward (``jax.vjp`` at
+    the stored input activation), exactly the F/B nodes the simulator times
+    for the same schedule.  The homogeneous-stack convenience wrapper over
+    :func:`pipeline_stage_shard_map` (no embedding/head stages, loss on the
+    raw final activation).
+
+    Args:
+      params: pytree of per-layer stacked leaves, leading dim L divisible by
+        ``S * v``; layer-major (the natural model layout).
+      xs: microbatched inputs ``(M, batch, d)``, replicated.
+      layer_fn: ``(per_layer_params, activation) -> activation``.
+      mesh: mesh containing ``axis_name`` of size ``schedule.n_stages``.
+      schedule: a validated :class:`PipelineSchedule`.
+      loss_fn: scalar per-microbatch loss on the final-stage output; the
+        backward of the last virtual stage is seeded with its vjp.  Default
+        ``0.5 * sum(y**2)`` (cotangent ``y``).
+
+    Returns ``(loss, outs, grads)``: summed microbatch loss, final-stage
+    outputs ``(M, batch, d)`` (replicated), and parameter gradients in the
+    original layer-major layout.
+    """
+    lf = lambda p, x: (layer_fn(p, x), 0.0)  # noqa: E731
+    wrapped_loss = None
+    if loss_fn is not None:
+        wrapped_loss = lambda lp, y, lm: loss_fn(y)  # noqa: E731
+    loss, _aux, outs, (_gf, gblocks, _gl) = pipeline_stage_shard_map(
+        {}, params, {}, xs, None, lf, mesh, schedule,
+        first_fn=None, loss_fn=wrapped_loss, axis_name=axis_name,
+    )
+    return loss, outs, gblocks
 
 
 # ---------------------------------------------------------------------------

@@ -14,11 +14,10 @@ path:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 
-from repro.models.sharding import ShardingCtx, make_ctx, tree_shardings
+from repro.models.sharding import ShardingCtx, tree_shardings
 
 
 @dataclass(frozen=True)

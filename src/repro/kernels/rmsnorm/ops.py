@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.rmsnorm.kernel import fused_rmsnorm_2d
 from repro.kernels.rmsnorm.ref import rmsnorm_ref

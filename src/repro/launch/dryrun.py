@@ -37,7 +37,6 @@ from repro.launch.mesh import make_production_mesh, mesh_info
 from repro.models import batch_logical_axes, build_model, input_specs
 from repro.models.sharding import make_ctx, tree_specs, use_sharding
 from repro.optim import make_optimizer
-from repro.optim.optimizers import Optimizer
 from repro.optim.schedules import cosine_with_warmup
 from repro.train.step import abstract_state, make_train_step
 

@@ -11,7 +11,6 @@ to experiments/perf/ and the narrative log lives in EXPERIMENTS.md §Perf.
 """
 import argparse
 import dataclasses
-import json
 
 from repro.configs.base import get_config
 from repro.launch.dryrun import run_cell

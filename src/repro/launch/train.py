@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import time
 
@@ -27,19 +26,25 @@ from repro.configs.base import ShapeConfig, get_config, smoke_variant
 from repro.data import make_train_iterator
 from repro.ft import HeartbeatMonitor, StepTimeMonitor, StragglerPolicy
 from repro.models import build_model
-from repro.models.sharding import (
-    data_axis_size,
-    make_ctx,
-    tree_shardings,
-    use_sharding,
-)
+from repro.models.sharding import data_axis_size, make_ctx, use_sharding
 from repro.optim import cosine_with_warmup, make_optimizer
-from repro.train import make_sharded_train_step, make_train_step
-from repro.train.step import TrainState, init_state
+from repro.train import make_sharded_train_step
+from repro.train.step import init_state
 
 
-def build_mesh():
+def build_mesh(pp: int = 0):
+    """(data, model) GSPMD mesh; ``pp >= 1`` builds the (data, stage)
+    pipeline-executor mesh with ``pp`` stage devices instead."""
     n = jax.device_count()
+    if pp >= 1:
+        if n % pp != 0:
+            raise ValueError(
+                f"--pp {pp} needs a device count divisible by it (have {n})"
+            )
+        return make_mesh(
+            (n // pp, pp), ("data", "stage"),
+            axis_types=(AxisType.Auto,) * 2,
+        )
     return make_mesh(
         (n, 1), ("data", "model"),
         axis_types=(AxisType.Auto,) * 2,
@@ -95,8 +100,9 @@ def pipeline_plan_report(
     line (instead of failing the launch) when the config cannot realize the
     schedule, e.g. layers not divisible by pp*vstages.
     """
-    from repro.core.autotuner import Autotuner, layer_cost_from_config
+    from repro.core.autotuner import Autotuner
     from repro.core.strategy import Strategy
+    from repro.models.pipeline import model_layer_cost
 
     strategy = Strategy(pp=pp, microbatches=microbatches, schedule=schedule,
                         vstages=vstages)
@@ -108,7 +114,9 @@ def pipeline_plan_report(
         log_fn(f"[pp-plan] {strategy.describe()} not realizable: {e}")
         return None
     micro_bs = max(batch // microbatches, 1)
-    cost = layer_cost_from_config(cfg, micro_bs, seq, tp=1)
+    # boundary payload from the model's own activation shape/dtype — the
+    # executor's ppermute byte twin, not the analytic bf16 default
+    cost = model_layer_cost(cfg, micro_bs, seq, tp=1)
     hops = strategy.make_pipeline_schedule().comm_bytes(cost.boundary_bytes)
     log_fn(
         f"[pp-plan] {strategy.describe()}: simulated step "
@@ -118,6 +126,43 @@ def pipeline_plan_report(
         f"boundary traffic {hops / 2**20:.2f} MiB/step"
     )
     return result
+
+
+def pipeline_parity_report(
+    plan, *, micro_batch: int, seq: int, dp: int = 1,
+    compression: str = "none", log_fn=print,
+) -> float:
+    """Model-derived sim bytes vs the executor's byte twin; raises on drift.
+
+    The launch-time incarnation of the tests/test_model_pipeline.py parity
+    gate: the simulator's collective-permute nodes over
+    ``repro.core.strategy.model_pipeline_graph`` must sum to exactly the
+    scheduled ppermute traffic the executor will put on the wire
+    (``PipelinePlan.boundary_bytes_per_step``).
+    """
+    from repro.core.estimator import dist_comm_bytes
+    from repro.core.strategy import model_pipeline_graph
+
+    g = model_pipeline_graph(
+        plan.cfg, plan.strategy(dp=dp, compression=compression),
+        micro_batch, seq,
+    )
+    sim = sum(
+        dist_comm_bytes(n) for n in g.nodes
+        if n.kind == "collective-permute"
+    )
+    ex = plan.boundary_bytes_per_step(micro_batch, seq)
+    ok = abs(sim - ex) <= 1e-6 * max(ex, 1.0)
+    log_fn(
+        f"[pp-exec] {plan.describe()}: boundary bytes/step "
+        f"sim={sim:.0f} exec={ex:.0f} "
+        f"({'parity ok' if ok else 'PARITY MISMATCH'})"
+    )
+    if not ok:
+        raise AssertionError(
+            f"pipeline byte parity drift: sim {sim} != exec {ex}"
+        )
+    return sim
 
 
 def train(
@@ -132,6 +177,10 @@ def train(
     warmup: int = 20,
     grad_accum: int = 1,
     compression: str = "none",
+    pp: int = 0,
+    pp_schedule: str = "1f1b",
+    vstages: int = 1,
+    microbatches: int = 0,
     log_every: int = 10,
     ckpt_every: int = 50,
     host_id: int = 0,
@@ -140,19 +189,44 @@ def train(
     log_fn=print,
 ):
     shape = ShapeConfig("train_driver", seq, batch, "train")
-    mesh = build_mesh()
+    pipeline_on = pp > 1 or vstages > 1
+    plan = None
+    if pipeline_on:
+        from repro.models.pipeline import make_plan
+
+        pp = max(pp, 1)
+        mb = microbatches or max(pp, 1)
+        plan = make_plan(
+            cfg, pp, mb, schedule=pp_schedule, vstages=vstages
+        )
+        mesh = build_mesh(pp)
+    else:
+        mesh = build_mesh()
     dp = data_axis_size(mesh)
     ctx = make_ctx(mesh, overrides=cfg.sharding_overrides)
     model = build_model(cfg)
     opt = make_optimizer(cfg.optimizer)
     sched = cosine_with_warmup(lr, warmup, max(steps, warmup + 1))
-    # one factory for both strategies: dense returns the plain jit-able
+    # one factory for every strategy: dense returns the plain jit-able
     # step; compressed wraps the same body in shard_map over "data" with
-    # the per-rank error-feedback residuals threaded through TrainState
+    # the per-rank error-feedback residuals threaded through TrainState;
+    # a pipeline plan runs the REAL model through the scheduled executor
+    # on the (data, stage) mesh (repro.models.pipeline)
     step_fn = make_sharded_train_step(
         model, opt, sched, mesh,
         grad_accum=grad_accum, compression=compression,
+        pipeline=plan,
     )
+    if plan is not None:
+        micro_bs = batch // (dp * grad_accum * plan.microbatches)
+        log_fn(
+            f"[pp-exec] executing {plan.describe()} on mesh "
+            f"dp{dp}xpp{plan.pp} ({micro_bs} seqs/microbatch)"
+        )
+        pipeline_parity_report(
+            plan, micro_batch=micro_bs, seq=seq, dp=dp,
+            compression=compression, log_fn=log_fn,
+        )
 
     with use_sharding(ctx):
         state, axes = init_state(
@@ -245,8 +319,11 @@ def main() -> None:
                     help="MoE execution strategy (ep_a2a = explicit "
                          "all-to-all expert parallelism, repro.dist.ep_a2a)")
     ap.add_argument("--pp", type=int, default=1,
-                    help="pipeline stages to plan for (simulated schedule "
-                         "report before training)")
+                    help="pipeline stages: simulate the schedule AND run "
+                         "the real model through the scheduled pipeline "
+                         "executor on a (data, stage) mesh "
+                         "(repro.models.pipeline; needs device_count % pp "
+                         "== 0)")
     ap.add_argument("--pp-schedule", default="1f1b",
                     choices=["gpipe", "1f1b", "interleaved_1f1b"],
                     help="pipeline schedule (repro.dist.schedules)")
@@ -289,6 +366,10 @@ def main() -> None:
         lr=args.lr,
         grad_accum=args.grad_accum,
         compression=args.compression,
+        pp=args.pp if (args.pp > 1 or args.vstages > 1) else 0,
+        pp_schedule=args.pp_schedule,
+        vstages=args.vstages,
+        microbatches=args.microbatches,
         ckpt_dir=args.ckpt_dir,
         restore_from=not args.no_restore,
     )

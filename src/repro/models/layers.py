@@ -11,7 +11,6 @@ loss are fp32.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MambaConfig
-from repro.models.layers import _init_dense, rmsnorm
+from repro.configs.base import ArchConfig
+from repro.models.layers import _init_dense
 from repro.models.sharding import shard_hint
 
 

@@ -7,8 +7,6 @@ host.  Remat policy wraps the scan body.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ long_500k dry-run cells compile — the engine is the host-side loop around it.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 

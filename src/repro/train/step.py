@@ -18,7 +18,6 @@ the same code path runs under ``shard_map`` on a real data mesh
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -27,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models.build import Model
-from repro.optim.optimizers import Optimizer, clip_by_global_norm, global_norm
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
 
 
 class TrainState(NamedTuple):
@@ -229,6 +228,211 @@ def make_train_step(
     return train_step
 
 
+def make_pipeline_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    schedule,
+    mesh,
+    plan,
+    grad_accum: int = 1,
+    max_grad_norm: float = 1.0,
+    compression: Optional[str] = None,
+    data_axis: str = "data",
+    stage_axis: str = "stage",
+):
+    """Train step executing the REAL model through the pipeline schedule.
+
+    One ``shard_map`` over the (data x stage) mesh: each data replica runs
+    its batch shard through the scheduled pipeline executor
+    (``repro.dist.pp.make_scheduled_body`` with the model's own
+    embed/block/head stage callables from ``repro.models.pipeline``), then
+    the gradients are mean-reduced over ``data_axis`` — dense ``pmean`` or
+    int8 ``compressed_psum`` with the error-feedback residuals carried in
+    ``TrainState.comp_state`` (block residuals are re-chunked to the
+    schedule's device-major rows, so each stage quantizes exactly the
+    parameters it owns).  Clip + optimizer run outside on the merged
+    model-layout gradients — identical to the GSPMD path's tail.
+
+    ``grad_accum > 1`` scans ``grad_accum`` pipeline passes per step (the
+    accumulation path of :func:`make_train_step`, one level up): the step
+    trains the mean over ``grad_accum * plan.microbatches`` microbatches.
+
+    TrainState layout (params, opt_state, comp_state) is unchanged —
+    checkpoints are interchangeable with the GSPMD path.
+    """
+    from repro.compat import shard_map
+    from repro.dist import pp as _pp
+    from repro.models.pipeline import partition_params, stage_fns
+    from repro.models.sharding import use_sharding
+
+    cfg: ArchConfig = model.cfg
+    compression = _normalize_compression(compression)
+    sched = plan.make_schedule()
+    M, A = plan.microbatches, grad_accum
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assert sizes.get(stage_axis) == plan.pp, (sizes, plan.pp)
+    dp = sizes.get(data_axis, 1)
+    first_fn, layer_fn, loss_fn = stage_fns(cfg, M)
+
+    def _extras_grads(gf, gl):
+        """Model's non-block gradient leaves via the canonical merge
+        (tied embeddings: sum the two paths of the shared table)."""
+        from repro.models.pipeline import merge_grads
+
+        merged = merge_grads(cfg, gf, None, gl)
+        del merged["blocks"]
+        return merged
+
+    def _extras_of(tree):
+        """The non-block subtree of a params-shaped tree, model keys."""
+        return {k: v for k, v in tree.items() if k != "blocks"}
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        first, blocks, last = partition_params(cfg, params)
+        arranged = _pp.arrange_params_for_schedule(blocks, sched)
+
+        b_lead = {v.shape[0] for v in batch.values()}
+        (B,) = b_lead
+        assert B % (dp * A * M) == 0, (
+            f"batch {B} % (dp {dp} * grad_accum {A} * microbatches {M}) != 0"
+        )
+        bm = B // (dp * A * M)
+        tok_sds = jax.ShapeDtypeStruct(
+            (bm,) + batch["tokens"].shape[1:], batch["tokens"].dtype
+        )
+        act_sds = jax.eval_shape(first_fn, first, {"tokens": tok_sds})
+        sched_body = _pp.make_scheduled_body(
+            sched, layer_fn, act_sds,
+            first_fn=first_fn, loss_fn=loss_fn, axis_name=stage_axis,
+        )
+
+        comp_on = compression is not None
+        if comp_on:
+            res_extras = _extras_of(state.comp_state)
+            res_blocks = _pp.arrange_params_for_schedule(
+                state.comp_state["blocks"], sched, axis=1
+            )
+
+        def body(arranged, first, last, batch_local, *res):
+            with use_sharding(None):
+                micro = {
+                    k: v.reshape((A, M, bm) + v.shape[1:])
+                    for k, v in batch_local.items()
+                }
+
+                def one_pass(carry, mb):
+                    ce_s, aux_s, gb_s, gf_s, gl_s = carry
+                    xs = {"tokens": mb["tokens"]}
+                    li = {k: v for k, v in mb.items() if k != "tokens"}
+                    ce, aux, _outs, gb, gf, gl = sched_body(
+                        arranged, first, last, xs, li
+                    )
+                    add = lambda a, b: jax.tree_util.tree_map(  # noqa: E731
+                        jnp.add, a, b
+                    )
+                    return (
+                        ce_s + ce, aux_s + aux,
+                        add(gb_s, gb), add(gf_s, gf), add(gl_s, gl),
+                    ), None
+
+                zero = (
+                    jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32),
+                    jax.tree_util.tree_map(jnp.zeros_like, arranged),
+                    jax.tree_util.tree_map(jnp.zeros_like, first),
+                    jax.tree_util.tree_map(jnp.zeros_like, last),
+                )
+                (ce, aux, gb, gf, gl), _ = jax.lax.scan(one_pass, zero, micro)
+                scale = lambda t: jax.tree_util.tree_map(  # noqa: E731
+                    lambda x: x / A, t
+                )
+                ce, aux = ce / A, aux / A
+                gb, gf, gl = scale(gb), scale(gf), scale(gl)
+
+                gtree = {"extras": _extras_grads(gf, gl), "blocks": gb}
+                if comp_on:
+                    from repro.dist.compress import compressed_psum
+
+                    re_, rb_ = res
+                    rtree = {
+                        "extras": jax.tree_util.tree_map(
+                            lambda r: r[0], re_
+                        ),
+                        "blocks": jax.tree_util.tree_map(
+                            lambda r: r[0], rb_
+                        ),
+                    }
+                    gtree, new_res = compressed_psum(
+                        gtree, data_axis, rtree
+                    )
+                    new_res = jax.tree_util.tree_map(
+                        lambda r: r[None], new_res
+                    )
+                else:
+                    gtree = jax.tree_util.tree_map(
+                        lambda g: jax.lax.pmean(g, data_axis), gtree
+                    )
+                    new_res = None
+                ce = jax.lax.pmean(ce, data_axis)
+                aux = jax.lax.pmean(aux, data_axis)
+                if comp_on:
+                    return (ce, aux, gtree["extras"], gtree["blocks"],
+                            new_res["extras"], new_res["blocks"])
+                return ce, aux, gtree["extras"], gtree["blocks"]
+
+        in_specs = [P(stage_axis), P(), P(), P(data_axis)]
+        out_specs = [P(), P(), P(), P(stage_axis)]
+        args = [arranged, first, last, batch]
+        if comp_on:
+            in_specs += [P(data_axis), P(data_axis, stage_axis)]
+            out_specs += [P(data_axis), P(data_axis, stage_axis)]
+            args += [res_extras, res_blocks]
+        out = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=tuple(out_specs),
+            check_vma=False,
+        )(*args)
+        if comp_on:
+            ce, aux, g_extras, gb_rows, nres_extras, nres_blocks = out
+            comp_state = dict(nres_extras)
+            comp_state["blocks"] = _pp.unarrange_params_for_schedule(
+                nres_blocks, sched, axis=1
+            )
+        else:
+            ce, aux, g_extras, gb_rows = out
+            comp_state = state.comp_state
+
+        grads = dict(g_extras)
+        grads["blocks"] = _pp.unarrange_params_for_schedule(gb_rows, sched)
+        loss = ce + aux
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(state.step)
+        updates, opt_state = optimizer.update(
+            grads, state.opt_state, params, lr
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (
+                p.astype(jnp.float32) + u.astype(jnp.float32)
+            ).astype(p.dtype),
+            params,
+            updates,
+        )
+        metrics = {
+            "loss": loss, "ce": ce, "aux": aux,
+            "grad_norm": gnorm, "lr": lr,
+        }
+        return (
+            TrainState(state.step + 1, new_params, opt_state, comp_state),
+            metrics,
+        )
+
+    return train_step
+
+
 def make_sharded_train_step(
     model: Model,
     optimizer: Optimizer,
@@ -238,6 +442,7 @@ def make_sharded_train_step(
     max_grad_norm: float = 1.0,
     compression: Optional[str] = None,
     axis_name: str = "data",
+    pipeline=None,
 ):
     """The train step wrapped for a data mesh — the launcher's entry point.
 
@@ -245,10 +450,19 @@ def make_sharded_train_step(
     under jit).  Compressed training needs explicit per-device gradients,
     so the *same* :func:`make_train_step` body is wrapped in ``shard_map``:
     batch split over ``axis_name``, state replicated except the per-rank
-    ``comp_state`` slice.  One step function, both strategies — the
-    simulator's priced `Strategy.compression` always has this executable
-    counterpart.
+    ``comp_state`` slice.  With a ``pipeline`` plan
+    (:class:`repro.models.pipeline.PipelinePlan`), the step instead runs
+    the real model through the scheduled pipeline executor on the
+    (data x stage) mesh — see :func:`make_pipeline_train_step`.  One entry
+    point, all strategies — the simulator's priced :class:`Strategy` always
+    has an executable counterpart.
     """
+    if pipeline is not None:
+        return make_pipeline_train_step(
+            model, optimizer, schedule, mesh, pipeline,
+            grad_accum=grad_accum, max_grad_norm=max_grad_norm,
+            compression=compression, data_axis=axis_name,
+        )
     compression = _normalize_compression(compression)
     step = make_train_step(
         model, optimizer, schedule,

@@ -2,7 +2,6 @@
 determinism/disjointness, and the fault-tolerance components."""
 import json
 import os
-import time
 
 import jax.numpy as jnp
 import numpy as np

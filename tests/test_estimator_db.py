@@ -1,5 +1,4 @@
 """Estimator fallback chain, learned-model quality, DB roundtrip/merge."""
-import math
 import os
 import subprocess
 import sys

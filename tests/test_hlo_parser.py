@@ -8,7 +8,6 @@ from repro.core.hlo_parser import (
     decode_replica_groups,
     module_summary,
     parse_instruction,
-    parse_module,
     parse_type,
 )
 

@@ -1,0 +1,331 @@
+"""Real models through the pipeline-schedule executor (fast tier).
+
+The acceptance contract of the model-partitioning layer
+(``repro.models.pipeline``):
+
+  1. gradients of the pipeline-partitioned transformer/MoE — embedding,
+     blocks, final norm, head, router aux included — match ``jax.grad`` of
+     the GSPMD reference (the microbatched-mean loss) to numerical
+     tolerance, on single-stage meshes here (real multi-stage meshes run in
+     the slow subprocess tier);
+  2. the pipeline train step is bit-compatible with the plain
+     ``make_train_step(grad_accum=M)`` path (same split, same optimizer
+     tail), and composes with int8 compression and ``grad_accum``;
+  3. ``repro.core.strategy.model_pipeline_graph``'s comm annotations equal
+     the executor byte twins: boundary hops == scheduled ppermute payload,
+     per-stage gradient all-reduces == ``compressed_psum_bytes`` of the
+     per-stage parameter trees, MoE a2a nodes == ``moe_a2a_bytes``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, get_config, smoke_variant
+from repro.models import build_model
+from repro.models.build import make_concrete_batch
+from repro.models.pipeline import (
+    check_pipelineable,
+    make_plan,
+    merge_grads,
+    microbatched_reference,
+    moe_layers_per_vstage,
+    partition_params,
+    pipeline_loss_and_grads,
+    stage_param_trees,
+)
+
+SHAPE = ShapeConfig("pipe_test", 16, 4, "train")
+
+
+def _tiny(name, **kw):
+    cfg = smoke_variant(get_config(name))
+    changes = dict(
+        num_layers=4, d_model=64, num_heads=2, num_kv_heads=2,
+        head_dim=32, d_ff=128 if cfg.d_ff else 0, vocab_size=256,
+    )
+    changes.update(kw)
+    return dataclasses.replace(cfg, **changes)
+
+
+@pytest.fixture(scope="module")
+def stage1_mesh():
+    return jax.make_mesh(
+        (1,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+def _grad_parity(cfg, plan, mesh, rtol=2e-4):
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = make_concrete_batch(cfg, SHAPE)
+    loss, metrics, grads = jax.jit(
+        lambda p, b: pipeline_loss_and_grads(plan, p, b, mesh)
+    )(params, batch)
+    ref = microbatched_reference(model, plan.microbatches)
+    ref_loss, ref_grads = jax.value_and_grad(ref)(params, batch)
+    assert float(loss) == pytest.approx(float(ref_loss), rel=1e-5)
+    flat_ref = dict(jax.tree_util.tree_leaves_with_path(ref_grads))
+    for kp, g in jax.tree_util.tree_leaves_with_path(grads):
+        r = flat_ref[kp]
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=rtol, atol=rtol * float(
+                jnp.max(jnp.abs(r)) + 1e-8
+            ), err_msg=str(kp),
+        )
+    return metrics
+
+
+def test_dense_tied_interleaved_grads_match_reference(stage1_mesh):
+    """Tied-embeddings llama block stack, interleaved schedule: every
+    gradient (embed table carries BOTH the input and head paths) matches
+    autodiff of the microbatched GSPMD loss."""
+    cfg = _tiny("llama3.2-1b")
+    assert cfg.tie_embeddings
+    plan = make_plan(cfg, 1, 2, schedule="interleaved_1f1b", vstages=2)
+    _grad_parity(cfg, plan, stage1_mesh)
+
+
+def test_moe_grads_and_router_aux_match_reference(stage1_mesh):
+    """MoE blocks under the scheduled backward: the per-chunk router-balance
+    aux losses are cotangent-seeded locally and their sum matches the
+    reference's aux term."""
+    cfg = _tiny("qwen3-moe-235b-a22b")
+    plan = make_plan(cfg, 1, 2, schedule="interleaved_1f1b", vstages=2)
+    metrics = _grad_parity(cfg, plan, stage1_mesh, rtol=5e-4)
+    assert float(metrics["aux"]) > 0.0
+
+
+def test_untied_head_grads_flow_from_loss_vjp(stage1_mesh):
+    """A separate lm head lives on the last stage; its gradient comes out of
+    loss_fn's vjp (gpipe => the combined FIRST/LAST backward branch too,
+    since V == 2 here exercises both boundary branches)."""
+    cfg = _tiny("llama3.2-1b", tie_embeddings=False)
+    plan = make_plan(cfg, 1, 4, schedule="1f1b", vstages=1)
+    _grad_parity(cfg, plan, stage1_mesh)
+
+
+def test_partition_roundtrip_and_guards():
+    cfg = _tiny("llama3.2-1b")
+    model = build_model(cfg)
+    params, _ = model.abstract_params()
+    first, blocks, last = partition_params(cfg, params)
+    assert set(first) == {"embed"}
+    assert set(last) == {"final_norm", "embed"}  # tied
+    # tied leaf: merge sums both gradient paths
+    ones = jax.tree_util.tree_map(lambda s: jnp.ones(s.shape), params)
+    f2, b2, l2 = partition_params(cfg, ones)
+    m2 = merge_grads(cfg, f2, b2, l2)
+    assert set(m2) == {"embed", "blocks", "final_norm"}
+    assert float(m2["embed"][0, 0]) == 2.0
+
+    with pytest.raises(ValueError, match="family"):
+        check_pipelineable(smoke_variant(get_config("mamba2-2.7b")), 2)
+    with pytest.raises(ValueError, match="divisible"):
+        check_pipelineable(cfg, 3)
+    with pytest.raises(ValueError, match="vlm|patch"):
+        check_pipelineable(smoke_variant(get_config("pixtral-12b")), 2)
+
+
+def test_pipeline_step_matches_grad_accum_step():
+    """make_pipeline_train_step(grad_accum=2, M=2) produces the SAME new
+    params as make_train_step(grad_accum=4): identical microbatch split,
+    identical optimizer tail — only the execution schedule differs."""
+    from repro.optim import adamw, cosine_with_warmup
+    from repro.train.step import (
+        init_state,
+        make_pipeline_train_step,
+        make_train_step,
+    )
+
+    cfg = _tiny("llama3.2-1b")
+    shape = ShapeConfig("pipe_step", 16, 8, "train")
+    model = build_model(cfg)
+    opt = adamw()
+    lr = cosine_with_warmup(1e-3, 5, 100)
+    batch = make_concrete_batch(cfg, shape)
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "stage"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    plan = make_plan(cfg, 1, 2, schedule="1f1b", vstages=1)
+    pstep = jax.jit(
+        make_pipeline_train_step(model, opt, lr, mesh, plan, grad_accum=2)
+    )
+    rstep = jax.jit(make_train_step(model, opt, lr, grad_accum=4))
+    s1, _ = init_state(model, jax.random.PRNGKey(0), opt)
+    s2, _ = init_state(model, jax.random.PRNGKey(0), opt)
+    s1n, m1 = pstep(s1, batch)
+    s2n, m2 = rstep(s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-6)
+    for kp, p in jax.tree_util.tree_leaves_with_path(s1n.params):
+        r = dict(jax.tree_util.tree_leaves_with_path(s2n.params))[kp]
+        np.testing.assert_allclose(
+            np.asarray(p), np.asarray(r), rtol=1e-6, atol=1e-7,
+            err_msg=str(kp),
+        )
+
+
+def test_compressed_pipeline_step_trains_and_carries_residuals():
+    from repro.optim import adamw, cosine_with_warmup
+    from repro.train.step import init_state, make_pipeline_train_step
+
+    cfg = _tiny("llama3.2-1b")
+    shape = ShapeConfig("pipe_comp", 16, 8, "train")
+    model = build_model(cfg)
+    opt = adamw()
+    lr = cosine_with_warmup(1e-3, 2, 100)
+    batch = make_concrete_batch(cfg, shape)
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "stage"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    plan = make_plan(cfg, 1, 2, schedule="interleaved_1f1b", vstages=2)
+    step = jax.jit(
+        make_pipeline_train_step(
+            model, opt, lr, mesh, plan, compression="int8"
+        )
+    )
+    state, _ = init_state(
+        model, jax.random.PRNGKey(0), opt, compression="int8", dp=1
+    )
+    losses = []
+    for _ in range(6):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    # error-feedback residuals are carried (non-zero) and keep the
+    # checkpointable (dp, *param) layout
+    res_max = max(
+        float(jnp.max(jnp.abs(leaf)))
+        for leaf in jax.tree_util.tree_leaves(state.comp_state)
+    )
+    assert res_max > 0.0
+    for pleaf, rleaf in zip(
+        jax.tree_util.tree_leaves(state.params),
+        jax.tree_util.tree_leaves(state.comp_state),
+    ):
+        assert rleaf.shape == (1,) + pleaf.shape
+
+
+# ---------------------------------------------------------------------------
+# Sim <-> executor byte parity for the model-derived graph
+# ---------------------------------------------------------------------------
+
+
+def test_model_graph_boundary_bytes_equal_executor_twin():
+    from repro.core.estimator import dist_comm_bytes
+    from repro.core.strategy import model_pipeline_graph
+    from repro.dist import pp as dist_pp
+    from repro.dist.schedules import build_executor_plan
+
+    cfg = _tiny("llama3.2-1b", num_layers=8)
+    for sched_name, S, M, v in (
+        ("gpipe", 4, 4, 1), ("1f1b", 4, 8, 1), ("interleaved_1f1b", 4, 4, 2),
+    ):
+        plan = make_plan(cfg, S, M, schedule=sched_name, vstages=v)
+        g = model_pipeline_graph(
+            cfg, plan.strategy(), micro_batch=2, seq=16
+        )
+        sends = [n for n in g.nodes if n.kind == "collective-permute"]
+        assert all(n.meta.get("pp_hop") for n in sends)
+        sim = sum(dist_comm_bytes(n) for n in sends)
+        sch = plan.make_schedule()
+        hop = plan.hop_bytes(2, 16)
+        assert sim == sch.comm_bytes(hop)
+        assert sim == build_executor_plan(sch).comm_bytes(hop)
+        assert sim == dist_pp.schedule_transfer_bytes(
+            sch, plan.act_shape(2, 16), jnp.dtype(cfg.compute_dtype)
+        )
+
+
+@pytest.mark.parametrize("scheme", ["none", "int8"])
+def test_model_graph_grad_allreduce_bytes_equal_stage_trees(scheme):
+    """dp > 1: each stage's gradAR node prices exactly the per-leaf payload
+    of that stage's parameter tree — compressed_psum_bytes leaf for leaf,
+    embedding on stage 0 and norm/head (tied table included) on the last."""
+    from repro.core.estimator import dist_comm_bytes
+    from repro.core.strategy import model_pipeline_graph
+    from repro.dist.compress import compressed_psum_bytes
+
+    cfg = _tiny("llama3.2-1b", num_layers=8)
+    plan = make_plan(cfg, 4, 4, schedule="1f1b")
+    model = build_model(cfg)
+    params, _ = model.abstract_params()
+    g = model_pipeline_graph(
+        cfg, plan.strategy(dp=2, compression=scheme),
+        micro_batch=2, seq=16, params=params,
+    )
+    trees = stage_param_trees(plan, params)
+    for s, tree in enumerate(trees):
+        node = next(n for n in g.nodes if n.name == f"gradAR{s}")
+        assert dist_comm_bytes(node) == compressed_psum_bytes(
+            tree, scheme=scheme
+        )
+    # the partition covers every parameter exactly once (plus the tied
+    # table's second appearance on the last stage)
+    total = sum(
+        n
+        for tree in trees
+        for n in map(int, [np.prod(leaf.shape) for leaf in
+                           jax.tree_util.tree_leaves(tree)])
+    )
+    n_params = sum(
+        int(np.prod(leaf.shape))
+        for leaf in jax.tree_util.tree_leaves(params)
+    )
+    tied_extra = int(np.prod(params["embed"].shape)) if cfg.tie_embeddings else 0
+    assert total == n_params + tied_extra
+
+
+def test_model_graph_moe_a2a_nodes_equal_dist_twin():
+    from repro.core.estimator import dist_comm_bytes
+    from repro.core.strategy import model_pipeline_graph
+    from repro.dist.ep_a2a import moe_a2a_bytes
+
+    cfg = _tiny("qwen3-moe-235b-a22b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, impl="ep_a2a")
+    )
+    plan = make_plan(cfg, 2, 2, schedule="1f1b")
+    micro_batch, seq = 2, 16
+    # no expert-parallel width (dp=1, ep=1): nothing to dispatch over, so
+    # no a2a is priced — the sim never charges phantom collectives
+    g1 = model_pipeline_graph(cfg, plan.strategy(), micro_batch, seq)
+    assert not [n for n in g1.nodes if n.kind == "all-to-all"]
+    g = model_pipeline_graph(cfg, plan.strategy(dp=2), micro_batch, seq)
+    a2a_nodes = [n for n in g.nodes if n.kind == "all-to-all"]
+    # every MoE layer of every vstage, once per fwd microbatch step
+    want = sum(moe_layers_per_vstage(plan)) * plan.microbatches
+    assert len(a2a_nodes) == want
+    assert all(n.group_size == 2 for n in a2a_nodes)
+    twin = moe_a2a_bytes(cfg.moe, micro_batch * seq, cfg.d_model, itemsize=4)
+    for n in a2a_nodes:
+        assert dist_comm_bytes(n) == twin
+
+
+def test_simulated_interleaving_still_beats_flat_for_model_graph():
+    """The model-derived graph preserves the schedule-quality ordering the
+    synthetic graph established: interleaved-1F1B < 1F1B makespan when comm
+    is cheap relative to compute."""
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.hardware import TPU_V5E
+    from repro.core.simulator import simulate
+    from repro.core.strategy import model_pipeline_graph
+
+    # the full config: compute-dominated per-chunk cost, where the smaller
+    # interleaved bubble pays for its extra boundary traffic (the tiny
+    # smoke model is comm-bound and would legitimately prefer flat 1F1B)
+    cfg = get_config("llama3.2-1b")
+    est = OpTimeEstimator(TPU_V5E)
+    flat = make_plan(cfg, 4, 8, schedule="1f1b")
+    inter = make_plan(cfg, 4, 8, schedule="interleaved_1f1b", vstages=2)
+    m_flat = simulate(
+        model_pipeline_graph(cfg, flat.strategy(), 4, 128), est.duration
+    ).makespan
+    m_int = simulate(
+        model_pipeline_graph(cfg, inter.strategy(), 4, 128), est.duration
+    ).makespan
+    assert m_int < m_flat

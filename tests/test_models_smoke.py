@@ -116,7 +116,6 @@ def test_blockwise_attention_matches_dense():
     """The auto-blockwise path must equal dense attention numerically."""
     import dataclasses as dc
 
-    from repro.models import layers as L
 
     cfg = smoke_variant(get_config("llama3.2-1b"))
     cfg_block = dc.replace(cfg, attn_impl="blockwise", attn_block_kv=16)

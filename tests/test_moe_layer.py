@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig
 from repro.models.moe import capacity, init_moe, moe_ffn

@@ -7,7 +7,6 @@ from repro.core.strategy import LayerCost, Strategy, pipeline_graph
 from repro.dist.schedules import (
     FWD,
     GPipeSchedule,
-    InterleavedOneFOneBSchedule,
     OneFOneBSchedule,
     Step,
     build_executor_plan,

@@ -3,7 +3,7 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.models.sharding import DEFAULT_RULES, make_ctx
+from repro.models.sharding import make_ctx
 
 
 def mesh1():

@@ -3,7 +3,6 @@ import types
 
 import pytest
 from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
 
 from repro.core.hardware import TPU_V5E, collective_time, wire_bytes
 from repro.models.sharding import DEFAULT_RULES, make_ctx

@@ -1,5 +1,4 @@
 """DES engine: exact schedules on known DAGs + hypothesis invariants."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
