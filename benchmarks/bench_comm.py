@@ -1,73 +1,159 @@
-"""Paper Table 1 analog: interconnect throughput per collective scenario.
+"""Paper Table 1 analog: interconnect throughput per collective scenario —
+now the netprof sim-vs-real gauge.
 
-Table 1 measures GPU-GPU / host-GPU / NCCL-all-reduce MB/s across QPI, root
-complex and PCIe-switch topologies.  Our platform equivalents:
+Three sections, all emitted as CSV rows (``run()``) and as one
+machine-readable JSON report (``--json PATH`` / ``write_json``):
 
-* MEASURED: XLA host-device collectives (all-reduce / all-gather /
-  collective-permute over 8 forced host devices, run in a subprocess so the
-  device-count override never leaks into this process) — these calibrate the
-  simulator's cpu_host link model.
+* MEASURED + COMPARED: the netprof sweep calibrates 8 forced host devices
+  on a training payload grid (subprocess, so the device-count override
+  never leaks), then *held-out* payloads are measured for real and priced
+  two ways — fitted :class:`repro.netprof.CollectiveModel` vs the analytic
+  ring model (with its link bandwidth ring-inverted from the same
+  measurements, i.e. the strongest fair baseline).  The summary reports
+  mean |rel err| per pricing model; the measured model must come in below
+  the ring model on the CI host (the netprof acceptance metric).
 * MODELED: TPU v5e ICI ring throughput per collective from the hardware
-  spec (the contribute-your-platform story: a v5e user would drop in
-  measured numbers; the table reports the model we simulate with).
+  spec (the contribute-your-platform story).
+* DETERMINISTIC: spec-sheet ring table + synthetic-α–β netprof fit
+  recovery — pure model math, no hardware, gated against the committed
+  baseline by ``scripts/bench_gate.py``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
+import tempfile
 
-from repro.core.hardware import TPU_V5E, collective_time
+from repro.core.database import ProfileDB
+from repro.core.hardware import (
+    COLLECTIVE_KINDS,
+    LinkSpec,
+    TPU_V5E,
+    collective_time,
+)
 
+TRAIN_PAYLOADS = (2**16, 2**18, 2**20, 2**22)
+HOLDOUT_PAYLOADS = (3 * 2**16, 3 * 2**19)  # between training grid points
+
+# one combined pass: train and held-out payloads are measured interleaved
+# under identical process conditions (allocator, thread pools), then split
+# by payload in the parent — holding out a different *session* would
+# confound model error with session-to-session drift
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json
 from repro.core.database import ProfileDB
-from repro.core.profiler import OfflineProfiler
+from repro.netprof.sweep import SweepConfig, sweep_collectives
+
 db = ProfileDB()
-prof = OfflineProfiler(db, repeats=5)
-prof.profile_collectives(sizes=[2**18, 2**20, 2**22], values_per_arg=3)
-out = []
-for fam in ("all-reduce", "all-gather", "collective-permute"):
-    for e in db.entries("cpu_host", fam):
-        out.append({"fam": fam, "bytes": e.bytes, "mean_s": e.mean_s,
-                    "devices": e.args["devices"]})
-print(json.dumps(out))
+sweep_collectives(db, "cpu_host", SweepConfig(
+    payload_bytes={payloads!r}, dtypes=("float32",), repeats=7,
+    subgroup_meshes=False,
+))
+db.save({db_path!r})
+print("SWEEP_OK")
 """
 
 
-def run() -> list[dict]:
-    rows = []
+def _ring_inverted_link(train: ProfileDB, platform: str = "cpu_host") -> LinkSpec:
+    """The fair ring baseline: link bandwidth inverted from the same
+    all-reduce measurements the fitted model trains on — the identical
+    inversion host calibration uses (single-sourced in
+    ``repro.core.profiler.ring_inverted_link_bw``)."""
+    from repro.core.profiler import ring_inverted_link_bw
+
+    return LinkSpec(
+        "measured-ring",
+        ring_inverted_link_bw(train, platform) or 5e9,
+        latency=5e-6,
+    )
+
+
+def measured_comparison() -> dict:
+    """Calibrate + hold out in a subprocess; price held-out points by the
+    fitted model and by the ring model; return the comparison report."""
+    from repro.netprof.model import fit_collective_models
+    from repro.netprof.sweep import recorded_payload
+
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
     )
     env.pop("XLA_FLAGS", None)
-    try:
-        out = subprocess.run(
-            [sys.executable, "-c", _SUBPROC], env=env, capture_output=True,
-            text=True, timeout=600, check=True,
+    with tempfile.TemporaryDirectory() as td:
+        db_path = os.path.join(td, "sweep.json")
+        script = _SUBPROC.format(
+            payloads=tuple(sorted(TRAIN_PAYLOADS + HOLDOUT_PAYLOADS)),
+            db_path=db_path,
         )
-        measured = json.loads(out.stdout.strip().splitlines()[-1])
-    except Exception as e:  # pragma: no cover
-        measured = []
-        rows.append(
-            {"name": "table1_measure_error", "us_per_call": 0.0,
-             "derived": str(e)[:80]}
-        )
-    for m in measured:
-        gbps = m["bytes"] * m["devices"] / m["mean_s"] / 1e9
-        rows.append(
-            {
-                "name": f"table1_cpu_{m['fam']}_{int(m['bytes'])}B_{m['devices']}dev",
-                "us_per_call": m["mean_s"] * 1e6,
-                "derived": f"agg_GBps={gbps:.2f}",
+        try:
+            subprocess.run(
+                [sys.executable, "-c", script], env=env, capture_output=True,
+                text=True, timeout=900, check=True,
+            )
+            combined = ProfileDB.load(db_path)
+        except Exception as e:  # pragma: no cover
+            return {"error": str(e)[:200], "comparison": [], "summary": {}}
+
+    # split the combined session into train / held-out by recorded payload
+    train, holdout = ProfileDB(), ProfileDB()
+    held = {
+        (kind, recorded_payload(kind, p, 8, 4))
+        for kind in COLLECTIVE_KINDS
+        for p in HOLDOUT_PAYLOADS
+    }
+    for kind in COLLECTIVE_KINDS:
+        for e in combined.entries("cpu_host", kind):
+            b = int(e.args["per_device_bytes"])
+            (holdout if (kind, b) in held else train).add("cpu_host", kind, e)
+
+    models = fit_collective_models(train, "cpu_host")
+    link = _ring_inverted_link(train)
+    comparison = []
+    model_errs, ring_errs = [], []
+    for kind in COLLECTIVE_KINDS:
+        m = models.get(kind)
+        for e in holdout.entries("cpu_host", kind):
+            b = float(e.args["per_device_bytes"])
+            g = int(e.args["devices"])
+            real = e.mean_s
+            model_t = m.predict(b, g) if m is not None else None
+            ring_t = collective_time(kind, b, g, link)
+            row = {
+                "kind": kind, "per_device_bytes": int(b), "devices": g,
+                "real_s": real, "model_s": model_t, "ring_s": ring_t,
             }
-        )
-    # modeled TPU v5e ICI table (per-device payload 64 MiB)
+            if model_t is not None and real > 0:
+                row["model_rel_err"] = abs(model_t - real) / real
+                row["ring_rel_err"] = abs(ring_t - real) / real
+                model_errs.append(row["model_rel_err"])
+                ring_errs.append(row["ring_rel_err"])
+            comparison.append(row)
+    summary = {}
+    if model_errs:
+        me = sum(model_errs) / len(model_errs)
+        re_ = sum(ring_errs) / len(ring_errs)
+        summary = {
+            "holdout_points": len(model_errs),
+            "model_mean_rel_err": me,
+            "ring_mean_rel_err": re_,
+            "measured_beats_ring": bool(me < re_),
+        }
+    return {
+        "train_entries": len(train),
+        "holdout_entries": len(holdout),
+        "comparison": comparison,
+        "summary": summary,
+    }
+
+
+def modeled_tpu_rows() -> list[dict]:
+    """Spec-sheet TPU v5e ICI ring table (per-device payload 64 MiB)."""
     payload = 64 * 2**20
+    rows = []
     for fam in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
         for group in (16, 256):
             t = collective_time(fam, payload, group, TPU_V5E.ici)
@@ -81,6 +167,135 @@ def run() -> list[dict]:
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def deterministic_rows() -> list[dict]:
+    """Hardware-free metrics for the bench-regression gate.
+
+    Spec-sheet ring times are exact closed forms (tolerance 0); the
+    synthetic netprof fit-recovery rows exercise lstsq + log-log
+    interpolation, so they get a 1% band to absorb BLAS/numpy drift
+    across CI hosts while still pinning the model math.
+    """
+    from repro.netprof.model import fit_collective_models
+    from repro.netprof.sweep import synthetic_calibration
+
+    rows = []
+    for r in modeled_tpu_rows():
+        rows.append(
+            {
+                "name": f"comm_{r['name']}",
+                "value": r["us_per_call"],
+                "tol_rel": 0.0,
+                "tol_abs": 0.0,
+            }
+        )
+    db = ProfileDB()
+    synthetic_calibration(db, "synthetic")
+    models = fit_collective_models(db, "synthetic")
+    for kind in COLLECTIVE_KINDS:
+        m = models[kind]
+        rows.append(
+            {
+                # held-out payload, measured group: interpolation path
+                "name": f"comm_netprof_fit_{kind}_interp_us",
+                "value": m.predict(3 * 2**14, 4) * 1e6,
+                "tol_rel": 0.01,
+                "tol_abs": 0.0,
+            }
+        )
+        rows.append(
+            {
+                # unmeasured group: α–β cross-group extrapolation path
+                "name": f"comm_netprof_fit_{kind}_group16_us",
+                "value": m.predict(2**18, 16) * 1e6,
+                "tol_rel": 0.01,
+                "tol_abs": 0.0,
+            }
+        )
+    return rows
+
+
+def report(measure: bool = True) -> dict:
+    """The full machine-readable report (what ``--json`` writes)."""
+    out = {
+        "modeled_tpu": modeled_tpu_rows(),
+        "deterministic": {
+            r["name"]: r["value"] for r in deterministic_rows()
+        },
+    }
+    if measure:
+        out["measured"] = measured_comparison()
+    return out
+
+
+def run() -> list[dict]:
+    """CSV rows for the benchmark harness (benchmarks/run.py)."""
+    return _csv_rows(measured_comparison())
+
+
+def _csv_rows(meas: dict) -> list[dict]:
+    rows = []
+    if meas.get("error"):  # pragma: no cover
+        rows.append({"name": "table1_measure_error", "us_per_call": 0.0,
+                     "derived": meas["error"][:80]})
+    for c in meas.get("comparison", []):
+        gbps = c["per_device_bytes"] * c["devices"] / c["real_s"] / 1e9
+        rows.append(
+            {
+                "name": (
+                    f"table1_cpu_{c['kind']}_{c['per_device_bytes']}B_"
+                    f"{c['devices']}dev"
+                ),
+                "us_per_call": c["real_s"] * 1e6,
+                "derived": f"agg_GBps={gbps:.2f}",
+            }
+        )
+    s = meas.get("summary", {})
+    if s:
+        rows.append(
+            {
+                # value column carries the error in PERCENT (this row is a
+                # ratio, not a time; the column name is a harness artifact)
+                "name": "table1_cpu_sim_vs_real_err_pct",
+                "us_per_call": s["model_mean_rel_err"] * 100.0,
+                "derived": (
+                    f"measured_model={s['model_mean_rel_err'] * 100:.1f}% "
+                    f"ring={s['ring_mean_rel_err'] * 100:.1f}% "
+                    f"beats_ring={s['measured_beats_ring']}"
+                ),
+            }
+        )
+    rows.extend(modeled_tpu_rows())
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip the subprocess sweep (deterministic rows only)")
+    args = ap.parse_args()
+    rep = report(measure=not args.no_measure)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=2, sort_keys=True)
+        print(f"[bench_comm] wrote {args.json}")
+    s = rep.get("measured", {}).get("summary", {})
+    if s:
+        print(
+            f"[bench_comm] holdout |rel err|: measured model "
+            f"{s['model_mean_rel_err'] * 100:.1f}% vs ring "
+            f"{s['ring_mean_rel_err'] * 100:.1f}% "
+            f"(beats_ring={s['measured_beats_ring']})"
+        )
+    rows = (
+        _csv_rows(rep["measured"]) if "measured" in rep
+        else modeled_tpu_rows()
+    )
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,7 @@ DEFAULT_OUT = os.path.join(REPO, "BENCH_pr4.json")
 def collect(smoke: bool) -> dict[str, dict]:
     sys.path.insert(0, os.path.join(REPO, "src"))
     sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    import bench_comm
     import bench_pipeline_models
     import bench_sim_accuracy
 
@@ -44,6 +45,14 @@ def collect(smoke: bool) -> dict[str, dict]:
             "value": float(r["us_per_call"]), "tol_rel": 0.0, "tol_abs": 0.0,
         }
     for r in bench_pipeline_models.run(smoke=smoke):
+        metrics[r["name"]] = {
+            "value": float(r["value"]),
+            "tol_rel": float(r.get("tol_rel", 0.0)),
+            "tol_abs": float(r.get("tol_abs", 0.0)),
+        }
+    # comm rows: spec-sheet ring table (exact) + synthetic-α–β netprof fit
+    # recovery (pins CollectiveModel math; 1% band for BLAS drift)
+    for r in bench_comm.deterministic_rows():
         metrics[r["name"]] = {
             "value": float(r["value"]),
             "tol_rel": float(r.get("tol_rel", 0.0)),

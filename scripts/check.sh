@@ -10,6 +10,10 @@
 #   check.sh determinism standalone estimator reproducibility gate
 #   check.sh docs        markdown links + schedule-accuracy smoke
 #   check.sh bench       benchmark-regression gate vs the committed baseline
+#   check.sh netprof     interconnect-calibration smoke: sweep the 8-device
+#                        forced-CPU host into ${NETPROF_DB:-netprof_db.json},
+#                        then verify a pp+int8+MoE simulation prices every
+#                        collective from the measured chain (0 ring fallbacks)
 #   check.sh lint        ruff (config in pyproject.toml)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -45,6 +49,12 @@ if [[ "${1:-}" == "bench" ]]; then
     # deterministic sim-vs-real metrics vs the committed baseline; writes
     # BENCH_pr4.json (uploaded as a CI artifact)
     exec python scripts/bench_gate.py "${@:2}"
+fi
+
+if [[ "${1:-}" == "netprof" ]]; then
+    DB="${NETPROF_DB:-netprof_db.json}"
+    python scripts/calibrate_net.py --db "$DB" --force-host-devices 8 --smoke
+    exec python scripts/calibrate_net.py --db "$DB" --verify
 fi
 
 if [[ "${1:-}" == "lint" ]]; then

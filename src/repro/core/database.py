@@ -27,12 +27,38 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zlib
 from dataclasses import dataclass
 from typing import Optional
 
 
+def _canon_value(v):
+    """Canonicalize one args value so keys survive producer round-trips.
+
+    numpy scalars (what a sweep harness naturally produces) become native
+    Python, and integral floats become ints (a JSON writer elsewhere may
+    serialize ``1024.0``) — so ``{"per_device_bytes": np.int64(4096)}``
+    and the reloaded ``{"per_device_bytes": 4096}`` key identically.
+    """
+    if hasattr(v, "item"):
+        v = v.item()
+    if isinstance(v, float) and v.is_integer():
+        return int(v)
+    return v
+
+
 def _args_key(args: dict) -> tuple:
-    return tuple(sorted(args.items()))
+    return tuple(sorted((str(k), _canon_value(v)) for k, v in args.items()))
+
+
+def args_digest(args: dict) -> int:
+    """Stable 31-bit digest of an args dict.
+
+    crc32 over the canonical key repr — identical across processes and
+    hash salts (the same guarantee the estimator's fit seeding relies on;
+    Python's ``hash()`` is salted per process and must never key anything
+    that two processes compare)."""
+    return zlib.crc32(repr(_args_key(args)).encode("utf-8")) % 2**31
 
 
 @dataclass
@@ -103,8 +129,16 @@ class ProfileDB:
     def op_families(self, platform: str) -> list[str]:
         return sorted(self.platform(platform)["ops"])
 
+    def platforms(self) -> list[str]:
+        return sorted(self._data)
+
     def merge(self, other: "ProfileDB") -> None:
-        """Union another user's contributed measurements into this DB."""
+        """Union another user's contributed measurements into this DB.
+
+        Conflict policy (asserted in tests/test_estimator_db.py): two
+        entries with the same canonical ``_args_key`` keep the one with the
+        higher sample count ``n``; on a tie the incoming entry wins (the
+        contributor re-measured — prefer fresh)."""
         for plat, pdata in other._data.items():
             self.meta(plat).update(pdata.get("meta", {}))
             for op, entries in pdata.get("ops", {}).items():

@@ -8,11 +8,14 @@ Here the learned model is a small MLP (2x32, JAX, full-batch Adam) regressing
 all profiled points of the platform.  It captures the dispatch-overhead +
 throughput structure that a pure roofline misses on a real host.
 
-Fallback chain per graph node:
+Fallback chain per compute node:
   1. exact DB hit for (op_family, args)            — paper's database query
   2. learned regression on (flops, bytes)          — paper's NN estimator
   3. analytic roofline max(flops/peak, bytes/bw)   — spec-sheet platforms
-     (+ ring-model collective time on the link class)
+
+Collective nodes run their own measured chain (repro.netprof.pricing):
+exact DB hit -> fitted CollectiveModel -> ring model on the link class,
+with the winning stage stamped into ``node.meta["time_provenance"]``.
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ import numpy as np
 
 from repro.core.database import ProfileDB
 from repro.core.graph import OpNode
-from repro.core.hardware import PlatformSpec, collective_time
+from repro.core.hardware import COLLECTIVE_KINDS, PlatformSpec, collective_time
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +227,15 @@ class OpTimeEstimator:
         # comm-volume hook: OpNode -> effective per-device payload bytes
         self.comm_bytes_fn = comm_bytes_fn
         self.models: dict[str, MLPModel] = {}
+        # measured-collective pricing chain (repro.netprof): exact DB hit ->
+        # fitted CollectiveModel -> ring fallback, with per-node provenance
+        self.collective_pricer = None
         self.dispatch_s = 0.0
         self.op_overhead_s = 0.0
         if db is not None:
+            from repro.netprof.pricing import CollectivePricer
+
+            self.collective_pricer = CollectivePricer(db, platform)
             self.dispatch_s = float(
                 db.meta(platform.name).get("dispatch_s", 0.0)
             )
@@ -235,6 +244,12 @@ class OpTimeEstimator:
             )
             if use_learned:
                 for key, fams in _MODEL_SOURCES.items():
+                    # collective families never feed the compute MLP: their
+                    # cost is group-structured (entries differing only in
+                    # `devices` collide on the (flops, bytes) features), so
+                    # both the family list and any entry carrying a
+                    # `devices` arg are gated out — collectives are priced
+                    # by the CollectiveModel chain below instead
                     pts = [
                         (
                             e.flops,
@@ -242,8 +257,11 @@ class OpTimeEstimator:
                             max(e.mean_s - self.dispatch_s, 1e-8),
                         )
                         for fam in fams
+                        if fam not in COLLECTIVE_KINDS
                         for e in db.entries(platform.name, fam)
-                        if e.mean_s > 0 and (e.flops > 0 or e.bytes > 0)
+                        if e.mean_s > 0
+                        and (e.flops > 0 or e.bytes > 0)
+                        and "devices" not in e.args
                     ]
                     # stable digest, NOT hash(): Python string hashing is
                     # salted per process, which made fitted time models (and
@@ -326,23 +344,29 @@ class OpTimeEstimator:
         return base + self.dispatch_s
 
     def _collective(self, node: OpNode) -> float:
+        """Measured pricing chain: exact DB hit -> fitted CollectiveModel ->
+        ring fallback (repro.netprof.pricing).  The winning stage is stamped
+        into ``node.meta["time_provenance"]`` so timelines and launch
+        reports can show measured-vs-ring per node."""
+        from repro.netprof.pricing import PROV_DB, PROV_FIT, PROV_NOOP, PROV_RING
+
         link = self.platform.link_for(node.link_kind)
         nbytes = (
             self.comm_bytes_fn(node)
             if self.comm_bytes_fn is not None
             else node.comm_bytes
         )
-        # 1. exact DB hit (measured collectives on this platform)
-        if self.db is not None:
-            e = self.db.lookup(
-                self.platform.name,
-                node.kind,
-                {
-                    "per_device_bytes": int(nbytes),
-                    "devices": node.group_size,
-                },
+        if self.collective_pricer is not None:
+            t, prov = self.collective_pricer.price(
+                node.kind, nbytes, node.group_size, link
             )
-            if e is not None:
+            node.meta["time_provenance"] = prov
+            if prov == PROV_DB:
                 self.stats["db"] += 1
-                return e.mean_s
+            elif prov == PROV_FIT:
+                self.stats["learned"] += 1
+            return t
+        node.meta["time_provenance"] = (
+            PROV_RING if node.group_size > 1 else PROV_NOOP
+        )
         return collective_time(node.kind, nbytes, node.group_size, link)

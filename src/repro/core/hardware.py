@@ -80,6 +80,18 @@ PLATFORMS = {p.name: p for p in (TPU_V5E, CPU_HOST)}
 # ---------------------------------------------------------------------------
 # Collective algorithm models (ring)
 # ---------------------------------------------------------------------------
+# The collective op families: graph-node kinds priced on a link stream,
+# ProfileDB families the netprof sweep writes, and the families gated OUT of
+# the estimator's compute-time MLP (their cost is group-structured, not a
+# (flops, bytes) law — see repro.netprof).
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
 # bytes_on_wire(bytes_per_device, group_size) for each collective kind.
 # All-reduce = reduce-scatter + all-gather on a ring: 2 * (g-1)/g * B.
 # All-gather / reduce-scatter: (g-1)/g * (full bytes).

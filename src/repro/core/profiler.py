@@ -24,18 +24,32 @@ from repro.core.database import ProfileDB, ProfileEntry
 from repro.core.hardware import CPU_HOST, ChipSpec, LinkSpec, PlatformSpec
 
 
-def time_callable(
+def time_callable_samples(
     fn: Callable[[], object], repeats: int = 10, warmup: int = 3
-) -> tuple[float, float]:
-    """(mean_s, std_s) of fn(); fn must block until its result is ready."""
-    for _ in range(warmup):
+) -> np.ndarray:
+    """Raw per-call wall-clock samples of fn(); fn must block until its
+    result is ready.
+
+    At least one warmup call always runs, even when ``warmup=0`` is
+    requested: the first invocation of a jitted callable pays compile +
+    first-dispatch cost, and letting that land in the first timed sample
+    biases mean AND std of every entry written to the ProfileDB.
+    """
+    for _ in range(max(warmup, 1)):
         fn()
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         fn()
         ts.append(time.perf_counter() - t0)
-    a = np.asarray(ts)
+    return np.asarray(ts)
+
+
+def time_callable(
+    fn: Callable[[], object], repeats: int = 10, warmup: int = 3
+) -> tuple[float, float]:
+    """(mean_s, std_s) of fn(); see :func:`time_callable_samples`."""
+    a = time_callable_samples(fn, repeats=repeats, warmup=warmup)
     return float(a.mean()), float(a.std())
 
 
@@ -266,12 +280,16 @@ class OfflineProfiler:
             mean, std = time_callable(
                 lambda: jax.block_until_ready(f(x)), self.repeats
             )
+            # payload semantics must match collective_time / CollectiveModel:
+            # all-gather records its OUTPUT bytes (these entries feed the
+            # fitted netprof models, not just exact arg-match lookups)
+            payload = per_dev_elems * nb * (ndev if name == "all-gather" else 1)
             self.db.add(
                 self.platform, name,
                 ProfileEntry(
-                    {"per_device_bytes": per_dev_elems * nb, "devices": ndev},
+                    {"per_device_bytes": payload, "devices": ndev},
                     mean, std, self.repeats,
-                    bytes=float(per_dev_elems * nb),
+                    bytes=float(payload),
                 ),
             )
             count += 1
@@ -317,9 +335,26 @@ class OfflineProfiler:
 # ---------------------------------------------------------------------------
 
 
+def ring_inverted_link_bw(db: ProfileDB, platform: str) -> float:
+    """Best wire bandwidth implied by the platform's all-reduce
+    measurements under the ring model (the single-sourced inversion both
+    host calibration and the bench_comm ring baseline use); 0.0 when the
+    DB has no usable all-reduce entries."""
+    from repro.core.hardware import wire_bytes
+
+    best = 0.0
+    for e in db.entries(platform, "all-reduce"):
+        g = int(e.args.get("devices", 2))
+        if e.mean_s > 0 and g > 1:
+            best = max(best, wire_bytes("all-reduce", e.bytes, g) / e.mean_s)
+    return best
+
+
 def calibrate_host(db: ProfileDB, platform: str = "cpu_host") -> PlatformSpec:
     """Fit (peak_flops, mem_bw, dispatch overhead) from profiled points and
     store them in the DB meta; returns a PlatformSpec for the estimator."""
+    from repro.core.hardware import COLLECTIVE_KINDS
+
     meta = db.meta(platform)
     dots = db.entries(platform, "dot")
     peak = 0.0
@@ -332,10 +367,16 @@ def calibrate_host(db: ProfileDB, platform: str = "cpu_host") -> PlatformSpec:
             if e.mean_s > 0:
                 bw = max(bw, e.bytes / e.mean_s)
     overhead = 0.0
+    # compute-op timings only: collective sweep entries are link-bound and
+    # group-structured — letting them into the dispatch percentile would
+    # hand every compute node a multi-collective "overhead" on a host whose
+    # DB holds only a netprof calibration
     times = [
         e.mean_s
         for fam in db.op_families(platform)
+        if fam not in COLLECTIVE_KINDS
         for e in db.entries(platform, fam)
+        if "devices" not in e.args
     ]
     if times:
         overhead = float(np.percentile(np.asarray(times), 5))
@@ -343,13 +384,7 @@ def calibrate_host(db: ProfileDB, platform: str = "cpu_host") -> PlatformSpec:
     meta["mem_bw"] = bw or CPU_HOST.chip.hbm_bw
     meta["dispatch_s"] = overhead
     # link bandwidth from collective profiles (ring-model inversion)
-    link_bw = 0.0
-    for e in db.entries(platform, "all-reduce"):
-        g = int(e.args.get("devices", 2))
-        if e.mean_s > 0 and g > 1:
-            wire = 2.0 * (g - 1) / g * e.bytes
-            link_bw = max(link_bw, wire / e.mean_s)
-    meta["link_bw"] = link_bw or CPU_HOST.ici.bw
+    meta["link_bw"] = ring_inverted_link_bw(db, platform) or CPU_HOST.ici.bw
     return PlatformSpec(
         name=platform,
         chip=ChipSpec(

@@ -149,6 +149,12 @@ def pipeline_graph(
     emerge from the table rather than from schedule-specific dependency
     arithmetic.
 
+    Every collective node this builder emits (boundary sends, gradient
+    all-reduces, MoE a2a) is priced by the estimator's measured chain on a
+    calibrated host — exact DB hit -> fitted CollectiveModel -> ring
+    (repro.netprof) — with the chosen source stamped into
+    ``node.meta["time_provenance"]`` after simulation.
+
     The optional keyword arguments let a *model-derived* partition
     (:func:`model_pipeline_graph`) refine the synthetic defaults without a
     second builder: ``hop_meta_extra`` merges into every boundary-send

@@ -29,22 +29,33 @@ def _device_sort_key(device: str) -> tuple:
     return (3, 0, device)
 
 
-def to_chrome_trace(result: SimResult, path: str | None = None) -> dict:
+def to_chrome_trace(
+    result: SimResult, path: str | None = None, graph=None
+) -> dict:
+    """Export a simulated timeline; pass the simulated ``graph`` to attach
+    per-event pricing provenance (``measured-db`` / ``measured-fit`` /
+    ``ring``, written into node meta by the estimator's collective chain —
+    see repro.netprof) as trace-event args, so a perfetto click shows
+    whether that box was priced from a measurement or from the spec sheet.
+    """
     devices = sorted({e.device for e in result.events}, key=_device_sort_key)
     pid = {d: i for i, d in enumerate(devices)}
     events = []
     for e in result.events:
-        events.append(
-            {
-                "name": e.name,
-                "cat": e.kind,
-                "ph": "X",
-                "ts": e.start * 1e6,
-                "dur": (e.end - e.start) * 1e6,
-                "pid": pid[e.device],
-                "tid": 0,
-            }
-        )
+        ev = {
+            "name": e.name,
+            "cat": e.kind,
+            "ph": "X",
+            "ts": e.start * 1e6,
+            "dur": (e.end - e.start) * 1e6,
+            "pid": pid[e.device],
+            "tid": 0,
+        }
+        if graph is not None:
+            prov = graph.nodes[e.node].meta.get("time_provenance")
+            if prov is not None:
+                ev["args"] = {"time_provenance": prov}
+        events.append(ev)
     for d, p in pid.items():
         events.append(
             {

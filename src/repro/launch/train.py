@@ -85,9 +85,68 @@ def comm_report(
         )
 
 
+# one launch loads and fits a calibration DB once: plan report and parity
+# report share the estimator (and its provenance ledger) instead of
+# re-parsing the DB and re-training every model per report
+_NETPROF_CACHE: dict = {}
+
+
+def netprof_estimator(db_path: str, log_fn=print):
+    """(estimator, platform) priced from a calibrated interconnect DB.
+
+    Loads the ProfileDB written by ``scripts/calibrate_net.py``, picks the
+    calibrated platform (``cpu_host`` when present, else the DB's single
+    platform), and builds an :class:`OpTimeEstimator` whose collectives go
+    through the measured chain (exact DB hit -> fitted CollectiveModel ->
+    ring; repro.netprof).  ``cpu_host`` platforms are re-calibrated from
+    the DB's compute entries too (``repro.core.profiler.calibrate_host``),
+    so a fully profiled host prices compute AND comm from measurements.
+    Memoized per (path, mtime, size) — repeated calls within one launch
+    reuse the fitted estimator and log its banner once.
+    """
+    from repro.core.database import ProfileDB
+
+    st = os.stat(db_path)
+    cache_key = (os.path.abspath(db_path), st.st_mtime_ns, st.st_size)
+    hit = _NETPROF_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.hardware import PLATFORMS
+    from repro.core.profiler import calibrate_host
+    from repro.netprof.pricing import netprof_meta
+
+    db = ProfileDB.load(db_path)
+    plats = db.platforms()
+    name = "cpu_host" if "cpu_host" in plats else (plats[0] if plats else "")
+    if not name:
+        raise ValueError(f"--netprof-db {db_path}: no platforms in DB")
+    if name in PLATFORMS and name != "cpu_host":
+        platform = PLATFORMS[name]
+    else:
+        # cpu_host and custom --platform names: derive the spec from the
+        # DB's own measurements (falls back to CPU_HOST constants for
+        # anything unprofiled)
+        platform = calibrate_host(db, name)
+    stamp = netprof_meta(db, name)
+    if stamp:
+        log_fn(
+            f"[netprof] {db_path}: platform {name}, "
+            f"{stamp.get('entries', 0)} collective measurements, "
+            f"groups {stamp.get('groups')}, "
+            f"collectives {len(stamp.get('collectives', []))}"
+        )
+    else:
+        log_fn(f"[netprof] {db_path}: platform {name} "
+               f"(no netprof sweep stamp — collectives may ring-fall back)")
+    out = (OpTimeEstimator(platform, db), platform)
+    _NETPROF_CACHE[cache_key] = out
+    return out
+
+
 def pipeline_plan_report(
     cfg, *, pp: int, schedule: str, vstages: int, microbatches: int,
-    batch: int, seq: int, log_fn=print,
+    batch: int, seq: int, netprof_db: str | None = None, log_fn=print,
 ):
     """Simulate the requested pipeline schedule for this config and log it.
 
@@ -106,13 +165,24 @@ def pipeline_plan_report(
 
     strategy = Strategy(pp=pp, microbatches=microbatches, schedule=schedule,
                         vstages=vstages)
+    est = platform = None
+    if netprof_db:
+        est, platform = netprof_estimator(netprof_db, log_fn=log_fn)
     tuner = Autotuner(cfg, chips=pp, global_batch=max(batch, microbatches),
-                      seq=seq)
+                      seq=seq,
+                      **({"platform": platform, "estimator": est}
+                         if est is not None else {}))
     try:
         result = tuner.evaluate(strategy)
     except (ValueError, AssertionError, ZeroDivisionError) as e:
         log_fn(f"[pp-plan] {strategy.describe()} not realizable: {e}")
         return None
+    if est is not None and est.collective_pricer is not None:
+        for line in est.collective_pricer.report_lines():
+            log_fn(f"[netprof] {line}")
+        ring = est.collective_pricer.ring_fallbacks_for_profiled()
+        log_fn(f"[netprof] ring-fallback nodes for profiled collectives: "
+               f"{ring}")
     micro_bs = max(batch // microbatches, 1)
     # boundary payload from the model's own activation shape/dtype — the
     # executor's ppermute byte twin, not the analytic bf16 default
@@ -130,7 +200,7 @@ def pipeline_plan_report(
 
 def pipeline_parity_report(
     plan, *, micro_batch: int, seq: int, dp: int = 1,
-    compression: str = "none", log_fn=print,
+    compression: str = "none", estimator=None, log_fn=print,
 ) -> float:
     """Model-derived sim bytes vs the executor's byte twin; raises on drift.
 
@@ -162,6 +232,24 @@ def pipeline_parity_report(
         raise AssertionError(
             f"pipeline byte parity drift: sim {sim} != exec {ex}"
         )
+    if estimator is not None:
+        # price every comm node through the measured chain and report the
+        # per-kind provenance next to the byte parity it complements: bytes
+        # twin-exact AND time measured == the full sim-vs-real loop closed
+        from repro.netprof.pricing import PROV_RING, graph_provenance
+
+        for n in g.nodes:
+            if n.is_collective:
+                estimator.duration(n)
+        prov = graph_provenance(g)
+        for kind in sorted(prov):
+            s = prov[kind]
+            log_fn(
+                f"[netprof] {kind}: "
+                + " / ".join(f"{v} {k}" for k, v in sorted(s.items()))
+            )
+        rings = sum(s.get(PROV_RING, 0) for s in prov.values())
+        log_fn(f"[netprof] comm nodes ring-priced: {rings}")
     return sim
 
 
@@ -181,6 +269,7 @@ def train(
     pp_schedule: str = "1f1b",
     vstages: int = 1,
     microbatches: int = 0,
+    netprof_db: str | None = None,
     log_every: int = 10,
     ckpt_every: int = 50,
     host_id: int = 0,
@@ -223,9 +312,12 @@ def train(
             f"[pp-exec] executing {plan.describe()} on mesh "
             f"dp{dp}xpp{plan.pp} ({micro_bs} seqs/microbatch)"
         )
+        est = None
+        if netprof_db:
+            est, _ = netprof_estimator(netprof_db, log_fn=log_fn)
         pipeline_parity_report(
             plan, micro_batch=micro_bs, seq=seq, dp=dp,
-            compression=compression, log_fn=log_fn,
+            compression=compression, estimator=est, log_fn=log_fn,
         )
 
     with use_sharding(ctx):
@@ -332,6 +424,13 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=0,
                     help="pipeline microbatches for the schedule plan "
                          "(default: --pp)")
+    ap.add_argument("--netprof-db", default=None,
+                    help="calibrated interconnect ProfileDB "
+                         "(scripts/calibrate_net.py): launch-time "
+                         "simulations price collectives from this host's "
+                         "measurements instead of the ring model, with "
+                         "per-collective provenance in the plan report "
+                         "(repro.netprof; docs/netprof.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -357,6 +456,7 @@ def main() -> None:
             microbatches=args.microbatches or max(args.pp, 1),
             batch=args.batch,
             seq=args.seq,
+            netprof_db=args.netprof_db,
         )
     train(
         cfg,
@@ -370,6 +470,7 @@ def main() -> None:
         pp_schedule=args.pp_schedule,
         vstages=args.vstages,
         microbatches=args.microbatches,
+        netprof_db=args.netprof_db,
         ckpt_dir=args.ckpt_dir,
         restore_from=not args.no_restore,
     )

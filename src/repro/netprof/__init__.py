@@ -1,0 +1,28 @@
+"""Offline interconnect profiling (netprof): measured collective time models.
+
+The paper's offline-profiling thesis applied to the *network* half of the
+simulator: instead of pricing every collective with the spec-sheet ring
+formula (``repro.core.hardware.collective_time``), a host runs the sweep
+harness once (``repro.netprof.sweep``), the measurements land in the
+ordinary :class:`repro.core.database.ProfileDB`, and every subsequent
+simulation on that host prices collectives through the measured chain
+
+    exact DB hit  ->  fitted CollectiveModel  ->  ring fallback
+
+implemented by :class:`repro.netprof.pricing.CollectivePricer` and wired
+into ``repro.core.estimator.OpTimeEstimator``.  See docs/netprof.md.
+"""
+from repro.netprof.model import (  # noqa: F401
+    COLLECTIVES,
+    CollectiveModel,
+    fit_collective_models,
+)
+from repro.netprof.pricing import (  # noqa: F401
+    PROV_DB,
+    PROV_FIT,
+    PROV_NOOP,
+    PROV_RING,
+    CollectivePricer,
+    graph_provenance,
+)
+from repro.netprof.sweep import SweepConfig, mesh_plans, sweep_collectives  # noqa: F401

@@ -1,0 +1,301 @@
+"""Interconnect sweep harness: microbenchmark collectives into the ProfileDB.
+
+Runs each collective kind over a configuration-agnostic (log-spaced payload
+x group size x dtype x mesh axis) grid and records one
+:class:`~repro.core.database.ProfileEntry` per point under the collective's
+op family, keyed ``{"per_device_bytes", "devices", "dtype", "axis"}``.
+
+Group sizes come from the *mesh plans*: the full 1-D mesh, plus — when the
+device count factors — the sub-axis groups of the most balanced 2-D mesh
+(named ``dp`` x ``pp``, the shapes the pipeline/data-parallel executors and
+the ep_a2a expert dispatch actually run collectives over).  A sub-axis
+sweep runs the collective in disjoint groups along one axis with the other
+axis populated, exactly like a dp gradient all-reduce inside each pipeline
+stage, so cross-group interference is measured, not assumed away.
+
+Payload semantics match ``repro.core.hardware.collective_time``: the
+recorded ``per_device_bytes`` is the per-device INPUT payload for
+all-reduce / reduce-scatter / all-to-all / collective-permute and the
+per-device OUTPUT payload for all-gather.
+
+Needs >1 visible XLA device; hosts force a multi-device CPU via
+``--xla_force_host_platform_device_count`` in a subprocess (or through
+``scripts/calibrate_net.py --force-host-devices``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.database import ProfileDB, ProfileEntry
+from repro.netprof.model import COLLECTIVES
+
+DEFAULT_PAYLOADS = tuple(2**p for p in range(12, 23, 2))  # 4 KiB .. 4 MiB
+SMOKE_PAYLOADS = (2**12, 2**14, 2**16)
+
+_DTYPES = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """One mesh to build and the axes to sweep collectives over."""
+
+    shape: tuple[int, ...]
+    names: tuple[str, ...]
+    sweep_axes: tuple[str, ...]
+
+    def tag(self, axis: str) -> str:
+        return f"{axis}@{'x'.join(str(s) for s in self.shape)}"
+
+
+def mesh_plans(ndev: int, subgroup_meshes: bool = True) -> list[MeshPlan]:
+    """Full 1-D mesh + the balanced 2-D (dp, pp) sub-axis factorization."""
+    if ndev < 2:
+        return []
+    plans = [MeshPlan((ndev,), ("x",), ("x",))]
+    if subgroup_meshes:
+        best = None
+        for a in range(2, int(ndev**0.5) + 1):
+            if ndev % a == 0 and ndev // a >= 2:
+                best = a  # largest divisor <= sqrt: most balanced split
+        if best is not None:
+            plans.append(
+                MeshPlan((best, ndev // best), ("dp", "pp"), ("dp", "pp"))
+            )
+    return plans
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    collectives: tuple[str, ...] = COLLECTIVES
+    payload_bytes: tuple[int, ...] = DEFAULT_PAYLOADS
+    dtypes: tuple[str, ...] = ("float32", "bfloat16")
+    repeats: int = 5
+    subgroup_meshes: bool = True
+    extra_meshes: tuple[MeshPlan, ...] = field(default_factory=tuple)
+
+    @staticmethod
+    def smoke() -> "SweepConfig":
+        return SweepConfig(
+            payload_bytes=SMOKE_PAYLOADS, dtypes=("float32",), repeats=3
+        )
+
+
+def _shard_elems(payload_bytes: int, group: int, itemsize: int) -> int:
+    """Shard-local element count for a requested payload: rounded up to a
+    whole multiple of the group so tiled reduce-scatter / all-to-all can
+    split it."""
+    per_elems = max(payload_bytes // itemsize, group)
+    return -(-per_elems // group) * group
+
+
+def recorded_payload(
+    kind: str, payload_bytes: int, group: int, itemsize: int = 4
+) -> int:
+    """The per-device payload a sweep point records for a requested size.
+
+    all-gather records its OUTPUT payload — the semantics
+    ``repro.core.hardware.collective_time`` prices with."""
+    shard = _shard_elems(payload_bytes, group, itemsize) * itemsize
+    return shard * group if kind == "all-gather" else shard
+
+
+def _collective_fn(kind: str, axis: str, group: int):
+    """The shard_map body for one collective over ``axis``."""
+    import jax
+
+    def body(v):
+        last = v.ndim - 1
+        if kind == "all-reduce":
+            return jax.lax.psum(v, axis)
+        if kind == "all-gather":
+            return jax.lax.all_gather(v, axis, axis=last, tiled=True)
+        if kind == "reduce-scatter":
+            return jax.lax.psum_scatter(
+                v, axis, scatter_dimension=last, tiled=True
+            )
+        if kind == "all-to-all":
+            return jax.lax.all_to_all(
+                v, axis, split_axis=last, concat_axis=last, tiled=True
+            )
+        if kind == "collective-permute":
+            perm = [(i, (i + 1) % group) for i in range(group)]
+            return jax.lax.ppermute(v, axis, perm)
+        raise ValueError(f"unknown collective kind {kind!r}")
+
+    return body
+
+
+def _measure(
+    mesh, plan: MeshPlan, axis: str, kind: str,
+    payload_bytes: int, dtype_name: str, repeats: int,
+) -> Optional[ProfileEntry]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.profiler import time_callable_samples
+
+    group = plan.shape[plan.names.index(axis)]
+    itemsize = _DTYPES[dtype_name]
+    per_elems = _shard_elems(payload_bytes, group, itemsize)
+    dt = jnp.dtype(dtype_name)
+    spec = P(*plan.names)
+    x = jax.device_put(
+        jnp.ones(plan.shape + (per_elems,), dt), NamedSharding(mesh, spec)
+    )
+    f = jax.jit(
+        shard_map(
+            _collective_fn(kind, axis, group), mesh=mesh,
+            in_specs=spec, out_specs=spec, check_vma=False,
+        )
+    )
+    try:
+        samples = time_callable_samples(
+            lambda: jax.block_until_ready(f(x)), repeats=repeats
+        )
+    except Exception:
+        return None  # backend lacks this collective/dtype combo: skip point
+    import numpy as np
+
+    # record the MEDIAN: shared-host collective timings have heavy-tailed
+    # scheduler outliers (occasional 10x samples) that would wreck a mean-
+    # based fit; std_s still reports the raw spread for DB consumers
+    mean = float(np.median(samples))
+    std = float(samples.std())
+    recorded = recorded_payload(kind, payload_bytes, group, itemsize)
+    return ProfileEntry(
+        args={
+            "per_device_bytes": int(recorded),
+            "devices": int(group),
+            "dtype": dtype_name,
+            "axis": plan.tag(axis),
+        },
+        mean_s=mean,
+        std_s=std,
+        n=repeats,
+        flops=0.0,
+        bytes=float(recorded),
+    )
+
+
+def sweep_collectives(
+    db: ProfileDB,
+    platform: str = "cpu_host",
+    config: Optional[SweepConfig] = None,
+) -> int:
+    """Run the sweep on the current backend; returns entries recorded."""
+    import jax
+
+    from repro.compat import AxisType, make_mesh
+
+    cfg = config or SweepConfig()
+    ndev = jax.device_count()
+    if ndev < 2:
+        return 0
+    count = 0
+    groups: set[int] = set()
+    plans = mesh_plans(ndev, cfg.subgroup_meshes) + list(cfg.extra_meshes)
+    for plan in plans:
+        mesh = make_mesh(
+            plan.shape, plan.names,
+            axis_types=(AxisType.Auto,) * len(plan.shape),
+        )
+        for axis in plan.sweep_axes:
+            g = plan.shape[plan.names.index(axis)]
+            if g < 2:
+                continue
+            for dtype_name in cfg.dtypes:
+                for payload in cfg.payload_bytes:
+                    for kind in cfg.collectives:
+                        e = _measure(
+                            mesh, plan, axis, kind,
+                            payload, dtype_name, cfg.repeats,
+                        )
+                        if e is not None:
+                            db.add(platform, kind, e)
+                            groups.add(g)
+                            count += 1
+    meta = db.meta(platform).setdefault("netprof", {})
+    meta.update(
+        {
+            "version": 1,
+            "backend": jax.default_backend(),
+            "device_count": int(ndev),
+            "groups": sorted(set(meta.get("groups", [])) | groups),
+            "collectives": sorted(
+                set(meta.get("collectives", [])) | set(cfg.collectives)
+            ),
+            "payload_bytes": sorted(
+                set(meta.get("payload_bytes", []))
+                | set(int(p) for p in cfg.payload_bytes)
+            ),
+            # recount from the DB rather than accumulating the raw
+            # measurement count: re-calibration REPLACES same-key entries,
+            # so the stamp must match what the DB actually holds
+            "entries": _collective_entry_count(db, platform),
+        }
+    )
+    db.meta(platform).setdefault("library", f"jax-{jax.__version__}")
+    return count
+
+
+def _collective_entry_count(db: ProfileDB, platform: str) -> int:
+    return sum(len(db.entries(platform, kind)) for kind in COLLECTIVES)
+
+
+def synthetic_calibration(
+    db: ProfileDB,
+    platform: str,
+    *,
+    groups: tuple[int, ...] = (2, 4, 8),
+    payload_bytes: tuple[int, ...] = DEFAULT_PAYLOADS,
+    alpha_per_step: float = 5e-6,
+    link_bw: float = 4e9,
+    collectives: tuple[str, ...] = COLLECTIVES,
+) -> int:
+    """Deterministic α–β ground-truth entries (tests + the bench gate).
+
+    Writes the exact postal-model times the fitted model should recover —
+    no hardware is touched, so the resulting fits (and anything priced from
+    them) are bit-stable across hosts and processes.
+    """
+    from repro.core.hardware import wire_bytes
+    from repro.netprof.model import latency_steps
+
+    count = 0
+    for kind in collectives:
+        for g in groups:
+            for b in payload_bytes:
+                t = (
+                    latency_steps(kind, g) * alpha_per_step
+                    + wire_bytes(kind, float(b), g) / link_bw
+                )
+                db.add(
+                    platform, kind,
+                    ProfileEntry(
+                        args={
+                            "per_device_bytes": int(b),
+                            "devices": int(g),
+                            "dtype": "float32",
+                            "axis": f"synthetic@{g}",
+                        },
+                        mean_s=float(t), std_s=0.0, n=1,
+                        flops=0.0, bytes=float(b),
+                    ),
+                )
+                count += 1
+    meta = db.meta(platform).setdefault("netprof", {})
+    meta.update(
+        {
+            "version": 1,
+            "backend": "synthetic",
+            "device_count": int(max(groups)),
+            "groups": sorted(groups),
+            "collectives": sorted(collectives),
+            "payload_bytes": sorted(int(b) for b in payload_bytes),
+            "entries": _collective_entry_count(db, platform),
+        }
+    )
+    return count

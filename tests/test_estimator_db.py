@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.database import ProfileDB, ProfileEntry
+from repro.core.database import ProfileDB, ProfileEntry, args_digest
 from repro.core.estimator import OpTimeEstimator, fit_time_model
 from repro.core.graph import OpNode
 from repro.core.hardware import CPU_HOST, TPU_V5E
@@ -151,6 +151,105 @@ def test_estimator_deterministic_across_processes(tmp_path):
         outs.append(out.stdout.strip())
     assert outs[0] == outs[1], outs
     assert outs[0]  # non-empty: the learned model actually fit
+
+
+# ---------------------------------------------------------------------------
+# Collective (netprof) entries: roundtrip, key stability, merge policy
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_ARGS = {
+    "per_device_bytes": 65536,
+    "devices": 4,
+    "dtype": "bfloat16",
+    "axis": "dp@2x4",
+}
+
+
+def test_collective_entry_roundtrip(tmp_path):
+    """Sweep-style entries (mixed int/str args) survive save/load/merge and
+    stay exact-lookup-able."""
+    db = ProfileDB()
+    db.add("cpu_host", "all-to-all", ProfileEntry(
+        dict(_COLLECTIVE_ARGS), 2.5e-4, 1e-5, n=5, bytes=65536.0,
+    ))
+    db.meta("cpu_host")["netprof"] = {"version": 1, "groups": [2, 4, 8]}
+    path = os.path.join(tmp_path, "db.json")
+    db.save(path)
+    db2 = ProfileDB.load(path)
+    e = db2.lookup("cpu_host", "all-to-all", dict(_COLLECTIVE_ARGS))
+    assert e is not None and e.mean_s == 2.5e-4 and e.n == 5
+    assert db2.meta("cpu_host")["netprof"]["groups"] == [2, 4, 8]
+    merged = ProfileDB()
+    merged.merge(db2)
+    assert len(merged) == 1
+    assert merged.lookup(
+        "cpu_host", "all-to-all", dict(_COLLECTIVE_ARGS)
+    ) is not None
+
+
+def test_lookup_canonicalizes_numeric_producers():
+    """numpy-scalar and float-integral args (what sweeps and JSON writers
+    naturally produce) key identically to native ints."""
+    db = ProfileDB()
+    db.add("p", "all-reduce", ProfileEntry(
+        {"per_device_bytes": np.int64(4096), "devices": np.int32(8)},
+        1e-4, 0.0, n=3,
+    ))
+    assert db.lookup(
+        "p", "all-reduce", {"per_device_bytes": 4096, "devices": 8}
+    ) is not None
+    assert db.lookup(
+        "p", "all-reduce", {"per_device_bytes": 4096.0, "devices": 8.0}
+    ) is not None
+    # and the canonicalized entry is JSON-clean after a roundtrip
+    assert args_digest({"per_device_bytes": np.int64(4096), "devices": 8}) \
+        == args_digest({"per_device_bytes": 4096, "devices": 8.0})
+
+
+_DIGEST_SCRIPT = textwrap.dedent(
+    """
+    from repro.core.database import args_digest
+    args = {"per_device_bytes": 65536, "devices": 4, "dtype": "bfloat16",
+            "axis": "dp@2x4"}
+    print(args_digest(args))
+    """
+)
+
+
+def test_args_digest_stable_across_processes():
+    """Same crc32-digest guarantee as the estimator fit seeding (PR 3):
+    the collective-entry key digest is identical under different hash
+    salts, so merged DBs key identically everywhere."""
+    outs = []
+    for salt in ("0", "31337"):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(__file__), "..", "src"
+        )
+        env["PYTHONHASHSEED"] = salt
+        out = subprocess.run(
+            [sys.executable, "-c", _DIGEST_SCRIPT], env=env,
+            capture_output=True, text=True, timeout=120,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        outs.append(out.stdout.strip())
+    assert outs[0] == outs[1] and outs[0]
+    assert outs[0] == str(args_digest(_COLLECTIVE_ARGS))
+
+
+def test_merge_conflict_policy_for_collectives():
+    """Higher sample count wins in either merge direction; on a tie the
+    incoming (freshly contributed) entry wins."""
+    key = {"per_device_bytes": 4096, "devices": 2}
+    a, b = ProfileDB(), ProfileDB()
+    a.add("p", "all-reduce", ProfileEntry(dict(key), 1.0, 0.0, n=10))
+    b.add("p", "all-reduce", ProfileEntry(dict(key), 2.0, 0.0, n=3))
+    a.merge(b)
+    assert a.lookup("p", "all-reduce", key).mean_s == 1.0  # higher n stays
+    c = ProfileDB()
+    c.add("p", "all-reduce", ProfileEntry(dict(key), 3.0, 0.0, n=10))
+    a.merge(c)
+    assert a.lookup("p", "all-reduce", key).mean_s == 3.0  # tie: incoming
 
 
 @settings(max_examples=25, deadline=None)

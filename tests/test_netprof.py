@@ -1,0 +1,399 @@
+"""The netprof subsystem: fitted collective models, the pricing chain
+(exact DB hit -> fitted CollectiveModel -> ring fallback), estimator /
+timeline / report integration, and the real sweep on forced devices (slow).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.database import ProfileDB, ProfileEntry
+from repro.core.estimator import OpTimeEstimator
+from repro.core.graph import DataflowGraph, OpNode
+from repro.core.hardware import CPU_HOST, TPU_V5E, collective_time, wire_bytes
+from repro.core.simulator import simulate
+from repro.netprof import (
+    COLLECTIVES,
+    PROV_DB,
+    PROV_FIT,
+    PROV_NOOP,
+    PROV_RING,
+    CollectivePricer,
+    fit_collective_models,
+    graph_provenance,
+    mesh_plans,
+)
+from repro.netprof.model import latency_steps
+from repro.netprof.report import acceptance_graph, measured_vs_ring
+from repro.netprof.sweep import synthetic_calibration
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+ALPHA_PS = 5e-6
+LINK_BW = 4e9
+
+
+def _truth(kind: str, nbytes: float, group: int) -> float:
+    return (
+        latency_steps(kind, group) * ALPHA_PS
+        + wire_bytes(kind, float(nbytes), group) / LINK_BW
+    )
+
+
+@pytest.fixture
+def calibrated_db():
+    db = ProfileDB()
+    synthetic_calibration(
+        db, "cpu_host", alpha_per_step=ALPHA_PS, link_bw=LINK_BW
+    )
+    return db
+
+
+# ---------------------------------------------------------------------------
+# CollectiveModel fit / predict
+# ---------------------------------------------------------------------------
+
+
+def test_fit_covers_all_collectives(calibrated_db):
+    models = fit_collective_models(calibrated_db, "cpu_host")
+    assert sorted(models) == sorted(COLLECTIVES)
+    for m in models.values():
+        assert m.groups == [2, 4, 8]
+
+
+def test_model_interpolates_within_grid(calibrated_db):
+    """Held-out payloads between grid points: within 12% of α–β truth."""
+    models = fit_collective_models(calibrated_db, "cpu_host")
+    for kind, m in models.items():
+        for b in (3000, 40000, 700000):
+            for g in (2, 4, 8):
+                t = m.predict(b, g)
+                tt = _truth(kind, b, g)
+                assert abs(t - tt) / tt < 0.12, (kind, b, g, t, tt)
+
+
+def test_model_extrapolates_beyond_payload_grid(calibrated_db):
+    """Payloads beyond the measured grid extend bandwidth-linearly."""
+    models = fit_collective_models(calibrated_db, "cpu_host")
+    for kind, m in models.items():
+        t = m.predict(64 * 2**20, 8)  # 16x past the largest measurement
+        tt = _truth(kind, 64 * 2**20, 8)
+        assert abs(t - tt) / tt < 0.15, (kind, t, tt)
+        tiny = m.predict(64, 8)  # below the smallest measurement
+        assert 0.0 < tiny <= m.predict(4096, 8) * 1.01
+
+
+def test_model_extrapolates_across_group_sizes(calibrated_db):
+    """Unmeasured groups (3, 16) recombine per-hop α and wire bandwidth."""
+    models = fit_collective_models(calibrated_db, "cpu_host")
+    for kind, m in models.items():
+        for g in (3, 16):
+            for b in (16384, 2**20):
+                t = m.predict(b, g)
+                tt = _truth(kind, b, g)
+                assert abs(t - tt) / tt < 0.35, (kind, g, b, t, tt)
+
+
+def test_model_group_one_is_free(calibrated_db):
+    models = fit_collective_models(calibrated_db, "cpu_host")
+    assert models["all-reduce"].predict(2**20, 1) == 0.0
+
+
+def test_mesh_plans_shapes():
+    flat8, sub8 = mesh_plans(8)
+    assert flat8.shape == (8,) and flat8.sweep_axes == ("x",)
+    assert sub8.shape == (2, 4) and sub8.names == ("dp", "pp")
+    assert sub8.sweep_axes == ("dp", "pp")
+    assert [p.shape for p in mesh_plans(7)] == [(7,)]  # prime: no sub-axes
+    assert [p.shape for p in mesh_plans(2)] == [(2,)]
+    assert mesh_plans(1) == []
+    assert mesh_plans(16)[1].shape == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Pricing chain order (acceptance: unit-tested DB hit -> fit -> ring)
+# ---------------------------------------------------------------------------
+
+
+def test_pricing_chain_order(calibrated_db):
+    pricer = CollectivePricer(calibrated_db, CPU_HOST)
+    # 1. exact (payload, group) measurement wins
+    t, prov = pricer.price("all-reduce", 4096, 4, CPU_HOST.ici)
+    assert prov == PROV_DB
+    assert t == pytest.approx(_truth("all-reduce", 4096, 4))
+    # 2. off-grid payload falls to the fitted model
+    t, prov = pricer.price("all-reduce", 5000, 4, CPU_HOST.ici)
+    assert prov == PROV_FIT
+    assert t == pytest.approx(_truth("all-reduce", 5000, 4), rel=0.12)
+    # 3. a kind with no measurements falls to the ring model
+    db = ProfileDB()
+    synthetic_calibration(
+        db, "cpu_host", collectives=("all-reduce",),
+        alpha_per_step=ALPHA_PS, link_bw=LINK_BW,
+    )
+    p2 = CollectivePricer(db, CPU_HOST)
+    t, prov = p2.price("all-to-all", 5000, 4, CPU_HOST.ici)
+    assert prov == PROV_RING
+    assert t == pytest.approx(
+        collective_time("all-to-all", 5000, 4, CPU_HOST.ici)
+    )
+    # 4. group <= 1 is a no-op
+    assert pricer.price("all-reduce", 5000, 1, CPU_HOST.ici) == (0.0, PROV_NOOP)
+    # ledger + ring-fallback accounting
+    assert pricer.stats["all-reduce"] == {PROV_DB: 1, PROV_FIT: 1, PROV_RING: 0}
+    assert pricer.ring_fallbacks_for_profiled() == 0
+    assert p2.ring_fallbacks_for_profiled() == 0  # all-to-all NOT profiled
+
+
+def test_exact_hit_averages_duplicate_measurements():
+    db = ProfileDB()
+    for axis, t in (("x@8", 0.010), ("dp@2x4", 0.030)):
+        db.add("cpu_host", "all-reduce", ProfileEntry(
+            {"per_device_bytes": 4096, "devices": 2, "dtype": "float32",
+             "axis": axis},
+            t, 0.0, n=3, bytes=4096.0,
+        ))
+    pricer = CollectivePricer(db, CPU_HOST)
+    t, prov = pricer.price("all-reduce", 4096, 2, CPU_HOST.ici)
+    assert prov == PROV_DB
+    assert t == pytest.approx(0.020)
+
+
+def test_legacy_profiler_entries_still_hit():
+    """Pre-netprof DB entries ({per_device_bytes, devices} only) keep
+    working as exact hits AND feed the fitted model."""
+    db = ProfileDB()
+    for b in (2**12, 2**14, 2**16):
+        db.add("cpu_host", "all-gather", ProfileEntry(
+            {"per_device_bytes": b, "devices": 8},
+            _truth("all-gather", b, 8), 0.0, n=5, bytes=float(b),
+        ))
+    pricer = CollectivePricer(db, CPU_HOST)
+    _, prov = pricer.price("all-gather", 2**14, 8, CPU_HOST.ici)
+    assert prov == PROV_DB
+    _, prov = pricer.price("all-gather", 3 * 2**12, 8, CPU_HOST.ici)
+    assert prov == PROV_FIT
+
+
+# ---------------------------------------------------------------------------
+# Estimator integration + provenance
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_stamps_provenance(calibrated_db):
+    est = OpTimeEstimator(CPU_HOST, calibrated_db)
+    node = OpNode(0, "ar", "all-reduce", comm_bytes=5000, group_size=4,
+                  link_kind="ici")
+    t = est.duration(node)
+    assert node.meta["time_provenance"] == PROV_FIT
+    assert t == pytest.approx(_truth("all-reduce", 5000, 4), rel=0.12)
+    bare = OpTimeEstimator(CPU_HOST)  # no DB: ring, and says so
+    node2 = OpNode(1, "ar", "all-reduce", comm_bytes=5000, group_size=4,
+                   link_kind="ici")
+    t2 = bare.duration(node2)
+    assert node2.meta["time_provenance"] == PROV_RING
+    assert t2 == pytest.approx(
+        collective_time("all-reduce", 5000, 4, CPU_HOST.ici)
+    )
+
+
+def test_estimator_ring_when_db_has_no_collectives():
+    db = ProfileDB()
+    db.add("tpu_v5e", "dot", ProfileEntry({"m": 8}, 0.1, 0.0))
+    est = OpTimeEstimator(TPU_V5E, db, use_learned=False)
+    node = OpNode(0, "ar", "all-reduce", comm_bytes=1e9, group_size=16,
+                  link_kind="ici")
+    assert est.duration(node) == pytest.approx(
+        2 * 15 / 16 * 1e9 / 50e9, rel=0.01
+    )
+    assert node.meta["time_provenance"] == PROV_RING
+
+
+def test_estimator_gate_excludes_collective_points():
+    """Satellite: collective entries (group-structured cost) must not feed
+    the (flops, bytes) compute MLP — same features, different devices
+    counts would collide."""
+    rng = np.random.default_rng(3)
+
+    def compute_db():
+        db = ProfileDB()
+        for i in range(12):
+            f = 10 ** rng.uniform(7, 11)
+            b = 10 ** rng.uniform(5, 8)
+            db.add("tpu_v5e", "dot", ProfileEntry(
+                {"i": i}, f / 1e11 + b / 1e10 + 1e-5, 0.0, n=3,
+                flops=f, bytes=b,
+            ))
+        return db
+
+    clean = compute_db()
+    rng = np.random.default_rng(3)  # same compute points again
+    polluted = compute_db()
+    # adversarial: collective-style measurements landing in a model-source
+    # family — same (flops=0, bytes) features, wildly different times
+    for g, t in ((2, 0.5), (4, 1.0), (8, 2.0), (16, 4.0)):
+        for b in (2**12, 2**16, 2**20):
+            polluted.add("tpu_v5e", "dot", ProfileEntry(
+                {"per_device_bytes": b, "devices": g}, t, 0.0, n=99,
+                flops=0.0, bytes=float(b),
+            ))
+    e1 = OpTimeEstimator(TPU_V5E, clean)
+    e2 = OpTimeEstimator(TPU_V5E, polluted)
+    node = OpNode(0, "d", "dot", flops=3e9, in_bytes=5e6, out_bytes=5e6)
+    n2 = OpNode(0, "d", "dot", flops=3e9, in_bytes=5e6, out_bytes=5e6)
+    assert e1.duration(node) == e2.duration(n2)
+
+
+def test_timeline_surfaces_provenance(calibrated_db, tmp_path):
+    from repro.core.timeline import to_chrome_trace
+
+    g = DataflowGraph("prov")
+    g.add("f", "fwd", flops=1e9, in_bytes=1e6)
+    g.add("ar", "all-reduce", deps=[0], comm_bytes=5000, group_size=4,
+          link_kind="ici")
+    est = OpTimeEstimator(CPU_HOST, calibrated_db)
+    res = simulate(g, est.duration, record_events=True)
+    trace = to_chrome_trace(res, path=str(tmp_path / "t.json"), graph=g)
+    tagged = [
+        e for e in trace["traceEvents"]
+        if e.get("args", {}).get("time_provenance")
+    ]
+    assert len(tagged) == 1
+    assert tagged[0]["args"]["time_provenance"] == PROV_FIT
+    # without the graph the export stays byte-identical to the old format
+    plain = to_chrome_trace(res)
+    assert all("args" not in e for e in plain["traceEvents"]
+               if e.get("ph") == "X")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: pp + int8-dp + MoE-a2a simulation fully measured
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_pp_int8_moe_all_measured(calibrated_db):
+    """Every comm node of the pipeline + int8 + MoE graph is priced from
+    the measured chain — 0 ring fallbacks on a calibrated host."""
+    graph = acceptance_graph()
+    kinds = {n.kind for n in graph.nodes if n.is_collective}
+    assert kinds == {"all-reduce", "collective-permute", "all-to-all"}
+    r = measured_vs_ring(graph, calibrated_db, CPU_HOST)
+    assert r.ring_fallbacks == 0
+    assert sorted(r.profiled_kinds) == sorted(COLLECTIVES)
+    priced = 0
+    for kind, s in r.provenance.items():
+        assert s.get(PROV_RING, 0) == 0, (kind, s)
+        priced += sum(s.values())
+    assert priced == r.collective_nodes
+    assert r.measured_makespan_s > 0 and r.ring_makespan_s > 0
+    # graph-side ledger agrees with the pricer-side ledger
+    assert graph_provenance(graph) == r.provenance
+
+
+def test_uncalibrated_host_rings_everywhere():
+    graph = acceptance_graph()
+    r = measured_vs_ring(graph, ProfileDB(), CPU_HOST)
+    assert r.profiled_kinds == []
+    assert all(
+        set(s) == {PROV_RING} for s in r.provenance.values()
+    )
+    assert r.measured_makespan_s == pytest.approx(r.ring_makespan_s)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: time_callable warmup bias
+# ---------------------------------------------------------------------------
+
+
+def test_time_callable_discards_compile_call():
+    """Even with warmup=0, the first (compile-expensive) call never lands
+    in the timed samples."""
+    from repro.core.profiler import time_callable
+
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.25)  # "compile" on first invocation
+
+    mean, std = time_callable(fn, repeats=5, warmup=0)
+    assert calls["n"] == 6  # 1 forced warmup + 5 timed
+    assert mean < 0.05, f"compile time leaked into samples: mean={mean}"
+
+
+# ---------------------------------------------------------------------------
+# Real sweep on a forced multi-device host (slow tier)
+# ---------------------------------------------------------------------------
+
+_SWEEP_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    from repro.core.database import ProfileDB
+    from repro.netprof.sweep import SweepConfig, sweep_collectives
+    from repro.netprof.model import fit_collective_models
+    from repro.netprof.pricing import CollectivePricer, PROV_FIT
+    from repro.core.hardware import CPU_HOST
+
+    db = ProfileDB()
+    n = sweep_collectives(db, "cpu_host", SweepConfig(
+        payload_bytes=(2**10, 2**13), dtypes=("float32", "bfloat16"),
+        repeats=2,
+    ))
+    db.save({db_path!r})
+    models = fit_collective_models(db, "cpu_host")
+    pricer = CollectivePricer(db, CPU_HOST)
+    t, prov = pricer.price("all-reduce", 3000, 4, CPU_HOST.ici)
+    out = {{
+        "n": n,
+        "kinds": sorted(models),
+        "groups": {{k: m.groups for k, m in models.items()}},
+        "meta": db.meta("cpu_host")["netprof"],
+        "fit_prov": prov,
+        "fit_t": t,
+    }}
+    print("NETPROF=" + json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+def test_sweep_forced_devices(tmp_path):
+    """The real harness on 4 forced CPU devices: every collective kind
+    measured on the flat mesh AND the 2x2 sub-axis groups, entries
+    roundtrip through save/load, and the fitted chain prices from them."""
+    import json
+
+    db_path = os.path.join(tmp_path, "netprof.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SWEEP_SCRIPT.format(db_path=db_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    payload = json.loads(
+        [ln for ln in out.stdout.splitlines() if ln.startswith("NETPROF=")][
+            -1
+        ][len("NETPROF="):]
+    )
+    assert payload["kinds"] == sorted(COLLECTIVES)
+    # flat 4-mesh plus both axes of the 2x2 sub-mesh -> groups {2, 4}
+    for kind in COLLECTIVES:
+        assert payload["groups"][kind] == [2, 4], kind
+    assert payload["meta"]["device_count"] == 4
+    assert payload["fit_prov"] == PROV_FIT and payload["fit_t"] > 0
+    # parent process: reload and price through the measured chain
+    db = ProfileDB.load(db_path)
+    est = OpTimeEstimator(CPU_HOST, db)
+    node = OpNode(0, "ar", "all-reduce", comm_bytes=3000, group_size=2,
+                  link_kind="ici")
+    assert est.duration(node) > 0
+    assert node.meta["time_provenance"].startswith("measured")
