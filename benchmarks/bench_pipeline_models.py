@@ -29,10 +29,11 @@ def _tiny(name: str, num_layers: int = 8, **kw):
     from repro.configs.base import get_config, smoke_variant
 
     cfg = smoke_variant(get_config(name))
-    changes = dict(
-        num_layers=num_layers, d_model=64, num_heads=2, num_kv_heads=2,
-        head_dim=32, d_ff=128 if cfg.d_ff else 0, vocab_size=256,
-    )
+    changes = {
+        "num_layers": num_layers, "d_model": 64, "num_heads": 2,
+        "num_kv_heads": 2, "head_dim": 32,
+        "d_ff": 128 if cfg.d_ff else 0, "vocab_size": 256,
+    }
     changes.update(kw)
     return dataclasses.replace(cfg, **changes)
 

@@ -173,7 +173,7 @@ def run(steps: int = 12, profile_repeats: int = 5) -> list[dict]:
             key=lambda t: -t[0],
         )
         seen = set()
-        for dur, n in costs:
+        for _dur, n in costs:
             sig = (n.kind, int(n.flops), int(n.bytes_accessed))
             if sig in seen or len(seen) >= 24:
                 continue

@@ -15,6 +15,11 @@
 #                        then verify a pp+int8+MoE simulation prices every
 #                        collective from the measured chain (0 ring fallbacks)
 #   check.sh lint        ruff (config in pyproject.toml)
+#   check.sh types       mypy over src/repro/{core,dist,analysis}
+#                        (permissive-strict config in pyproject.toml)
+#   check.sh analyze     static plan verifier (repro.analysis) over every
+#                        registered config; fails on any error-level
+#                        finding, writes ANALYZE_report.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -64,6 +69,21 @@ if [[ "${1:-}" == "lint" ]]; then
         exit 0
     fi
     exec ruff check src tests benchmarks scripts examples
+fi
+
+if [[ "${1:-}" == "types" ]]; then
+    if ! command -v mypy >/dev/null 2>&1; then
+        echo "[check] types skipped: mypy not installed" \
+             "(pip install -e '.[lint]')"
+        exit 0
+    fi
+    exec mypy src/repro/core src/repro/dist src/repro/analysis
+fi
+
+if [[ "${1:-}" == "analyze" ]]; then
+    # the static plan verifier must run clean (zero errors) over every
+    # registered config; exit status carries the verdict
+    exec python -m repro.analysis --json ANALYZE_report.json "${@:2}"
 fi
 
 # fail fast on import-error walls before running anything

@@ -1,0 +1,45 @@
+"""repro.analysis — static plan verification and sim-lint.
+
+The paper's pitch is evaluating plans *without* running them; this package
+closes the loop by proving a plan well-formed, deadlock-free, and fully
+priced before a single simulated or real second is spent.  Three plan
+representations, three lint families, one diagnostics engine:
+
+* :mod:`repro.analysis.graph_lints` — DataflowGraph structure, device
+  placement, and accounting completeness (G*/A* codes);
+* :mod:`repro.analysis.schedule_checks` — step-table legality, deadlock
+  detection with the stuck wait chain named, ppermute send/recv pairing
+  over the compiled executor plan (S* codes);
+* :mod:`repro.analysis.timeline_checks` — DES serialization/causality
+  invariants and the link-overlap divergence audit (T* codes).
+
+Load-bearing consumers: ``launch/train.py --analyze`` (raises
+:class:`PlanVerificationError` before executing a bad plan),
+``core/autotuner.py`` (prunes statically-illegal candidates before
+simulating), ``scripts/check.sh analyze`` (CI sweep over every registered
+config), and ``python -m repro.analysis``.  See docs/analysis.md.
+"""
+from repro.analysis.analyzer import (  # noqa: F401
+    analyze_all_configs,
+    analyze_graph,
+    analyze_training_plan,
+)
+from repro.analysis.diagnostics import (  # noqa: F401
+    DIAGNOSTIC_CODES,
+    Diagnostic,
+    PlanVerificationError,
+    Report,
+    merge_reports,
+)
+from repro.analysis.graph_lints import (  # noqa: F401
+    cycle_names,
+    find_cycle,
+    lint_graph,
+    unsimulated_summary,
+)
+from repro.analysis.schedule_checks import (  # noqa: F401
+    lint_executor_plan,
+    lint_schedule,
+    lint_strategy,
+)
+from repro.analysis.timeline_checks import audit_timeline  # noqa: F401

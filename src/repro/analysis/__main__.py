@@ -1,0 +1,61 @@
+"""CLI: sweep the static analyzer over every registered config.
+
+    PYTHONPATH=src python -m repro.analysis [--json report.json] \
+        [--pp 4] [--microbatches 8] [--seq 512] [--netprof-db db.json] \
+        [--no-sim]
+
+Exit status 0 when every analyzed plan is free of error-level findings,
+1 otherwise — the ``scripts/check.sh analyze`` CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.analyzer import analyze_all_configs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify pipeline plans for every config",
+    )
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--pp", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--micro-batch", type=int, default=1,
+                    help="sequences per microbatch for the cost model")
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--no-sim", action="store_true",
+                    help="skip the DES run + timeline audit (static only)")
+    ap.add_argument("--netprof-db", default=None,
+                    help="calibrated ProfileDB: audit collective pricing "
+                         "provenance (A003 on silent ring fallback)")
+    args = ap.parse_args(argv)
+
+    estimator = None
+    if args.netprof_db:
+        from repro.launch.train import netprof_estimator
+
+        estimator, _ = netprof_estimator(args.netprof_db)
+
+    report = analyze_all_configs(
+        pp=args.pp,
+        microbatches=args.microbatches,
+        micro_batch=args.micro_batch,
+        seq=args.seq,
+        estimator=estimator,
+        run_sim=not args.no_sim,
+        log_fn=print,
+    )
+    for line in report.summary_lines():
+        print(line)
+    if args.json:
+        report.to_json(args.json)
+        print(f"[analyze] report written to {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

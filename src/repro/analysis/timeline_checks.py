@@ -1,0 +1,149 @@
+"""Race/overlap audit over simulated timelines (:class:`SimResult` events).
+
+The DES serializes each logical device — two events overlapping on ONE
+device stream means the simulator's own FIFO invariant broke (T001), an
+event starting before a dependency finished means causality broke (T002).
+These are internal-consistency checks: they hold for every correct run and
+exist to catch estimator/device-fn bugs (negative durations, NaN times)
+the moment they corrupt a timeline rather than three plots later.
+
+T010 is different — an *audit*, not an invariant.  Distinct link streams
+(``link:pp``, ``link:dp0``, ...) are free to overlap in the simulation,
+but on real hardware they often share one physical fabric; every second
+two link streams are concurrently busy is a second where the serializing
+DES and overlapped hardware can diverge (the sim-vs-real gap measurement
+ROADMAP item 2 calls for).  The sweep-line reports total overlap seconds
+and the fraction of the makespan affected as report metrics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.analysis.diagnostics import Report
+from repro.core.graph import DataflowGraph
+from repro.core.simulator import SimResult
+
+_EPS = 1e-9
+
+
+def _overlap_windows(
+    intervals: list[tuple[float, float]]
+) -> list[tuple[float, float]]:
+    """Windows where >= 2 of the given busy intervals are simultaneously
+    active (sweep line over start/end boundaries)."""
+    bounds: list[tuple[float, int]] = []
+    for start, end in intervals:
+        if end > start:
+            bounds.append((start, +1))
+            bounds.append((end, -1))
+    bounds.sort()
+    out: list[tuple[float, float]] = []
+    depth = 0
+    opened = 0.0
+    for t, delta in bounds:
+        was = depth
+        depth += delta
+        if was < 2 <= depth:
+            opened = t
+        elif was >= 2 > depth:
+            if t > opened:
+                out.append((opened, t))
+    return out
+
+
+def audit_timeline(
+    result: SimResult,
+    graph: Optional[DataflowGraph] = None,
+    name: Optional[str] = None,
+) -> Report:
+    """T001-T004 invariants plus the T010 link-concurrency audit.
+
+    Needs a timeline simulated with ``record_events=True``; pass the
+    simulated ``graph`` to enable the causality check (T002).
+    """
+    report = Report(name or "timeline")
+    by_device: dict[str, list] = {}
+    node_end: dict[int, float] = {}
+    for e in result.events:
+        dur = e.end - e.start
+        if (
+            not math.isfinite(e.start)
+            or not math.isfinite(e.end)
+            or dur < -_EPS
+        ):
+            report.error(
+                "T003",
+                f"event {e.name!r} on {e.device} has invalid interval "
+                f"[{e.start}, {e.end}]",
+                node=e.node, name=e.name, device=e.device,
+            )
+            continue
+        if e.end > result.makespan * (1 + _EPS) + _EPS:
+            report.error(
+                "T004",
+                f"event {e.name!r} ends at {e.end:.6g}s, beyond the "
+                f"reported makespan {result.makespan:.6g}s",
+                node=e.node, name=e.name, device=e.device,
+            )
+        by_device.setdefault(e.device, []).append(e)
+        node_end[e.node] = max(node_end.get(e.node, 0.0), e.end)
+
+    # T001 — per-device serialization: a logical device is a FIFO; any
+    # overlap means the DES invariant (or a hand-built event list) broke
+    for device, evs in sorted(by_device.items()):
+        evs.sort(key=lambda e: (e.start, e.end, e.node))
+        for prev, cur in zip(evs, evs[1:]):
+            if cur.start < prev.end - _EPS:
+                report.error(
+                    "T001",
+                    f"device {device}: {cur.name!r} starts at "
+                    f"{cur.start:.6g}s while {prev.name!r} still runs "
+                    f"until {prev.end:.6g}s",
+                    device=device, node=cur.node, name=cur.name,
+                    conflicts_with=prev.name,
+                )
+
+    # T002 — causality: no event may start before a priced dependency ends
+    if graph is not None:
+        nodes = graph.nodes
+        for e in result.events:
+            if not (0 <= e.node < len(nodes)):
+                continue
+            for d in nodes[e.node].deps:
+                dep_end = node_end.get(d)
+                if dep_end is not None and e.start < dep_end - _EPS:
+                    report.error(
+                        "T002",
+                        f"event {e.name!r} starts at {e.start:.6g}s before "
+                        f"its dependency {nodes[d].name!r} finishes at "
+                        f"{dep_end:.6g}s",
+                        node=e.node, name=e.name, dep=d,
+                    )
+
+    # T010 — link-concurrency audit (metric, not an invariant)
+    link_intervals = [
+        (e.start, e.end)
+        for d, evs in by_device.items()
+        if d.startswith("link")
+        for e in evs
+    ]
+    windows = _overlap_windows(link_intervals)
+    overlap_s = sum(end - start for start, end in windows)
+    report.metrics["link_overlap_s"] = overlap_s
+    report.metrics["link_overlap_fraction"] = (
+        overlap_s / result.makespan if result.makespan > 0 else 0.0
+    )
+    report.metrics["timeline_events"] = float(len(result.events))
+    if overlap_s > _EPS:
+        worst = max(windows, key=lambda w: w[1] - w[0])
+        report.info(
+            "T010",
+            f"{len(windows)} windows ({overlap_s:.6g}s, "
+            f"{100 * overlap_s / result.makespan:.1f}% of makespan) have "
+            ">= 2 link streams concurrently busy — the serializing DES "
+            "and overlapped hardware can diverge here (worst window "
+            f"[{worst[0]:.6g}s, {worst[1]:.6g}s])",
+            windows=len(windows),
+        )
+    return report

@@ -264,18 +264,18 @@ def smoke_variant(cfg: ArchConfig) -> ArchConfig:
     Small layers/width, few experts, tiny vocab — exercises the exact same
     model-building code path as the full config.
     """
-    changes: dict = dict(
-        num_layers=min(cfg.num_layers, 4),
-        d_model=128,
-        num_heads=4,
-        num_kv_heads=min(cfg.num_kv_heads, 2),
-        head_dim=32,
-        d_ff=256 if cfg.d_ff else 0,
-        vocab_size=512,
-        grad_accum=1,
-        param_dtype="float32",
-        compute_dtype="float32",
-    )
+    changes: dict = {
+        "num_layers": min(cfg.num_layers, 4),
+        "d_model": 128,
+        "num_heads": 4,
+        "num_kv_heads": min(cfg.num_kv_heads, 2),
+        "head_dim": 32,
+        "d_ff": 256 if cfg.d_ff else 0,
+        "vocab_size": 512,
+        "grad_accum": 1,
+        "param_dtype": "float32",
+        "compute_dtype": "float32",
+    }
     if cfg.moe is not None:
         changes["moe"] = dataclasses.replace(
             cfg.moe,

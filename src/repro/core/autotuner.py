@@ -82,18 +82,27 @@ class Autotuner:
     def __post_init__(self):
         if self.estimator is None:
             self.estimator = OpTimeEstimator(self.platform)
+        # filled by candidates(): how many enumerated strategies static
+        # analysis rejected before simulation, attributed by code
+        self.prune_stats: dict = {
+            "enumerated": 0, "pruned": 0, "by_code": {}
+        }
 
     # -- candidate enumeration --------------------------------------------------
 
-    def candidates(
+    def enumerate_candidates(
         self,
         max_pp: int = 16,
         microbatch_options=(1, 2, 4, 8, 16, 32),
         vstage_options=(2,),
     ) -> list[Strategy]:
+        """Every candidate the resource constraints allow (chip factoring,
+        batch divisibility).  Schedule legality — layer partitioning,
+        schedule constructibility, table liveness — is NOT checked here;
+        that is the static analyzer's job (:meth:`prune`), so illegal
+        shapes are counted and attributed instead of silently skipped."""
         out = []
-        L = self.cfg.num_layers
-        for pp in [p for p in (1, 2, 4, 8, 16) if p <= max_pp and L % p == 0]:
+        for pp in [p for p in (1, 2, 4, 8, 16) if p <= max_pp]:
             rem = self.chips // pp
             if rem * pp != self.chips:
                 continue
@@ -110,12 +119,10 @@ class Autotuner:
                     scheds = [("1f1b", 1)]
                     if pp > 1:
                         scheds.insert(0, ("gpipe", 1))
-                        # interleaved-1F1B: v model chunks per device need
-                        # L % (pp*v) == 0 and the Megatron microbatch
-                        # grouping needs mb % pp == 0
-                        for v in vstage_options:
-                            if v > 1 and L % (pp * v) == 0 and mb % pp == 0:
-                                scheds.append(("interleaved_1f1b", v))
+                        scheds.extend(
+                            ("interleaved_1f1b", v)
+                            for v in vstage_options if v > 1
+                        )
                     for sched, v in scheds:
                         out.append(
                             Strategy(
@@ -124,6 +131,51 @@ class Autotuner:
                             )
                         )
         return out
+
+    def prune(
+        self, enumerated: list[Strategy]
+    ) -> tuple[list[Strategy], dict]:
+        """Drop statically-illegal candidates before any simulation.
+
+        Each candidate's schedule is verified by
+        ``repro.analysis.schedule_checks.lint_strategy`` — schedule not
+        constructible (S012, e.g. interleaved microbatches not divisible
+        by stages), layers not partitionable over the virtual stages
+        (S013), or a table that is structurally broken or deadlocks.
+        Returns ``(kept, stats)`` with ``stats = {"enumerated", "pruned",
+        "by_code"}`` attributing every rejection to its diagnostic code.
+        """
+        from repro.analysis.schedule_checks import lint_strategy
+
+        L = self.cfg.num_layers
+        kept: list[Strategy] = []
+        by_code: dict[str, int] = {}
+        for st in enumerated:
+            report = lint_strategy(st, L)
+            if report.ok:
+                kept.append(st)
+            else:
+                for code in report.codes():
+                    by_code[code] = by_code.get(code, 0) + 1
+        stats = {
+            "enumerated": len(enumerated),
+            "pruned": len(enumerated) - len(kept),
+            "by_code": by_code,
+        }
+        return kept, stats
+
+    def candidates(
+        self,
+        max_pp: int = 16,
+        microbatch_options=(1, 2, 4, 8, 16, 32),
+        vstage_options=(2,),
+    ) -> list[Strategy]:
+        kept, stats = self.prune(
+            self.enumerate_candidates(max_pp, microbatch_options,
+                                      vstage_options)
+        )
+        self.prune_stats = stats
+        return kept
 
     # -- simulation ---------------------------------------------------------------
 
@@ -135,6 +187,7 @@ class Autotuner:
         g = pipeline_graph(self.cfg.num_layers, cost, strategy)
 
         est = self.estimator
+        assert est is not None  # __post_init__ always fills the default
 
         def duration(node: OpNode) -> float:
             t = est.duration(node)
@@ -161,7 +214,18 @@ class Autotuner:
             comm_fraction=comm / res.makespan if res.makespan else 0.0,
         )
 
-    def search(self, **kw) -> list[TuneResult]:
-        results = [self.evaluate(s) for s in self.candidates(**kw)]
+    def search(self, log_fn=None, **kw) -> list[TuneResult]:
+        cands = self.candidates(**kw)
+        if log_fn is not None:
+            stats = self.prune_stats
+            attributed = ", ".join(
+                f"{c}x{n}" for c, n in sorted(stats["by_code"].items())
+            )
+            log_fn(
+                f"[autotune] static pruning rejected {stats['pruned']}/"
+                f"{stats['enumerated']} candidates before simulation"
+                + (f" ({attributed})" if attributed else "")
+            )
+        results = [self.evaluate(s) for s in cands]
         results.sort(key=lambda r: r.makespan_s)
         return results

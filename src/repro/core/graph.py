@@ -17,6 +17,15 @@ from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
 
+class GraphInvariantError(ValueError):
+    """A DataflowGraph structural invariant does not hold.
+
+    Raised by :meth:`DataflowGraph.validate` naming the offending node —
+    unlike a bare ``assert``, it survives ``python -O`` and tells you
+    *which* node broke (deep lints with cycle extraction live in
+    ``repro.analysis.graph_lints``)."""
+
+
 @dataclass
 class OpNode:
     uid: int
@@ -91,12 +100,35 @@ class DataflowGraph:
         return out
 
     def validate(self) -> None:
-        seen = set()
-        for n in self.nodes:
-            assert n.uid not in seen
+        """Raise :class:`GraphInvariantError` naming the offending node if
+        uids are duplicated/misnumbered, a dep is dangling, or the node
+        list is not in topological order."""
+        n_nodes = len(self.nodes)
+        seen: set[int] = set()
+        for idx, n in enumerate(self.nodes):
+            if n.uid in seen:
+                raise GraphInvariantError(
+                    f"graph {self.name!r}: node {n.name!r} at position "
+                    f"{idx} reuses uid {n.uid}"
+                )
             seen.add(n.uid)
+            if n.uid != idx:
+                raise GraphInvariantError(
+                    f"graph {self.name!r}: node {n.name!r} has uid "
+                    f"{n.uid} at position {idx}"
+                )
             for d in n.deps:
-                assert d < n.uid, "graph must be in topological order"
+                if not 0 <= d < n_nodes:
+                    raise GraphInvariantError(
+                        f"graph {self.name!r}: node {n.name!r} (uid "
+                        f"{n.uid}) depends on undefined uid {d}"
+                    )
+                if d >= n.uid:
+                    raise GraphInvariantError(
+                        f"graph {self.name!r}: node {n.name!r} (uid "
+                        f"{n.uid}) depends on uid {d} — nodes must be in "
+                        "topological order"
+                    )
 
     def critical_path(self, duration_fn) -> float:
         """Longest path through the DAG under ``duration_fn(node) -> s``.

@@ -94,6 +94,7 @@ class Simulator:
         # list with deterministic FIFO order per device
         ready: list[tuple[float, int]] = []
         finish = [0.0] * n
+        completed = [False] * n
         for node in graph.nodes:
             if indeg[node.uid] == 0:
                 heapq.heappush(ready, (0.0, node.uid))
@@ -116,6 +117,7 @@ class Simulator:
             if self.record_events and dur > 0:
                 events.append(SimEvent(uid, node.name, node.kind, dev, start, end))
             done += 1
+            completed[uid] = True
             for s in succ[uid]:
                 indeg[s] -= 1
                 if indeg[s] == 0:
@@ -124,9 +126,15 @@ class Simulator:
                     )
                     heapq.heappush(ready, (t, s))
         if done != n:
+            # name the stuck nodes and the cycle blocking them — extraction
+            # is the analyzer's job (lazy import keeps core free of a
+            # repro.analysis dependency at module load)
+            from repro.analysis.graph_lints import unsimulated_summary
+
             raise RuntimeError(
                 f"simulated {done}/{n} nodes — graph has a cycle or "
-                "unreachable dependencies"
+                f"unreachable dependencies; "
+                f"{unsimulated_summary(graph, completed)}"
             )
         return SimResult(makespan, dev_busy, events, time_by_kind)
 

@@ -92,7 +92,7 @@ class GraphBuilder:
 
     def add(self, name: str, kind: str, deps: list[str], **kw):
         assert name not in self.specs, f"duplicate node {name}"
-        self.specs[name] = dict(kind=kind, deps=deps, kw=kw)
+        self.specs[name] = {"kind": kind, "deps": deps, "kw": kw}
 
     def build(self) -> DataflowGraph:
         indeg = {n: 0 for n in self.specs}
@@ -171,9 +171,11 @@ def pipeline_graph(
     schedule = strategy.make_pipeline_schedule()
     schedule.validate()
     S, M, V = schedule.n_stages, schedule.n_microbatches, schedule.n_vstages
-    assert n_layers % V == 0, (
-        f"layers {n_layers} % virtual stages {V} != 0"
-    )
+    if n_layers % V != 0:
+        raise ValueError(
+            f"layers {n_layers} not divisible by virtual stages {V} "
+            f"(pp={strategy.pp} x v={strategy.vstages})"
+        )
     per_vstage = n_layers // V
     b = GraphBuilder(f"pipeline_{strategy.describe()}")
 

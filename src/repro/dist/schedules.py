@@ -405,7 +405,11 @@ class ExecutorPlan:
         """Useful hops per direction — must equal schedule.comm_steps()."""
         fwd = sum(map(sum, self.sends_fwd))
         bwd = sum(map(sum, self.sends_bwd))
-        assert fwd == bwd, (fwd, bwd)
+        if fwd != bwd:
+            raise ValueError(
+                f"{self.schedule.describe()}: asymmetric executor plan — "
+                f"{fwd} fwd sends vs {bwd} bwd sends"
+            )
         return fwd
 
     def comm_bytes(self, hop_bytes: float) -> float:
@@ -442,16 +446,32 @@ def build_executor_plan(schedule: PipelineSchedule) -> ExecutorPlan:
             sf[t][s] = 1
             # arrives on device (s+1)%S at tick t+1, for chunk of vstage k+1
             dst, at = (s + 1) % S, t + 1
-            assert at < T, "fwd send after last tick"
-            assert not rfv[at][dst], "fwd receive collision"
+            if at >= T:
+                raise ValueError(
+                    f"{schedule.describe()}: fwd send of {step.name} at "
+                    f"tick {t} lands after the final tick ({T})"
+                )
+            if rfv[at][dst]:
+                raise ValueError(
+                    f"{schedule.describe()}: fwd receive collision on "
+                    f"stage {dst} at tick {at} (sender {step.name})"
+                )
             rfv[at][dst] = 1
             rfc[at][dst] = schedule.chunk_of(k + 1)
             rfm[at][dst] = m
         if step.phase == BWD and k > 0:
             sb[t][s] = 1
             dst, at = (s - 1) % S, t + 1
-            assert at < T, "bwd send after last tick"
-            assert not rbv[at][dst], "bwd receive collision"
+            if at >= T:
+                raise ValueError(
+                    f"{schedule.describe()}: bwd send of {step.name} at "
+                    f"tick {t} lands after the final tick ({T})"
+                )
+            if rbv[at][dst]:
+                raise ValueError(
+                    f"{schedule.describe()}: bwd receive collision on "
+                    f"stage {dst} at tick {at} (sender {step.name})"
+                )
             rbv[at][dst] = 1
             rbc[at][dst] = schedule.chunk_of(k - 1)
             rbm[at][dst] = m

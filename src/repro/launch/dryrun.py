@@ -96,7 +96,7 @@ def _fsdp_flag(cfg):
     if not cfg.fsdp_exclude:
         return True
     excl = set(cfg.fsdp_exclude)
-    return lambda axes: not (set(a for a in axes if a) & excl)
+    return lambda axes: not ({a for a in axes if a} & excl)
 
 
 def build_cell(arch: str, shape_name: str, multi_pod: bool, cfg=None):

@@ -144,6 +144,32 @@ def netprof_estimator(db_path: str, log_fn=print):
     return out
 
 
+def plan_analysis_report(
+    cfg, strategy, *, micro_batch: int, seq: int, estimator=None,
+    log_fn=print,
+):
+    """Statically verify the launch plan before a single step executes.
+
+    Runs the full ``repro.analysis`` pass over the model-derived plan —
+    schedule table legality and ppermute pairing, graph structure and
+    accounting completeness (with netprof provenance audit when
+    ``--netprof-db`` supplied an estimator), and the DES timeline audit.
+    Raises :class:`repro.analysis.PlanVerificationError` on any
+    error-level finding: a plan that would deadlock the executor or price
+    garbage never reaches the mesh.
+    """
+    from repro.analysis import analyze_training_plan
+
+    report = analyze_training_plan(
+        cfg, strategy, micro_batch=micro_batch, seq=seq,
+        estimator=estimator, use_model_graph=True,
+    )
+    for line in report.summary_lines():
+        log_fn(f"[analyze] {line}")
+    report.raise_on_errors()
+    return report
+
+
 def pipeline_plan_report(
     cfg, *, pp: int, schedule: str, vstages: int, microbatches: int,
     batch: int, seq: int, netprof_db: str | None = None, log_fn=print,
@@ -270,6 +296,7 @@ def train(
     vstages: int = 1,
     microbatches: int = 0,
     netprof_db: str | None = None,
+    analyze: bool = False,
     log_every: int = 10,
     ckpt_every: int = 50,
     host_id: int = 0,
@@ -292,6 +319,26 @@ def train(
     else:
         mesh = build_mesh()
     dp = data_axis_size(mesh)
+    if analyze:
+        from repro.core.strategy import Strategy
+
+        mb_count = plan.microbatches if plan is not None else 1
+        est = None
+        if netprof_db:
+            est, _ = netprof_estimator(netprof_db, log_fn=log_fn)
+        plan_analysis_report(
+            cfg,
+            Strategy(
+                dp=dp,
+                pp=plan.pp if plan is not None else 1,
+                microbatches=mb_count,
+                schedule=pp_schedule if pipeline_on else "1f1b",
+                vstages=vstages if pipeline_on else 1,
+                compression=compression,
+            ),
+            micro_batch=max(batch // (dp * grad_accum * mb_count), 1),
+            seq=seq, estimator=est, log_fn=log_fn,
+        )
     ctx = make_ctx(mesh, overrides=cfg.sharding_overrides)
     model = build_model(cfg)
     opt = make_optimizer(cfg.optimizer)
@@ -431,6 +478,10 @@ def main() -> None:
                          "measurements instead of the ring model, with "
                          "per-collective provenance in the plan report "
                          "(repro.netprof; docs/netprof.md)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="statically verify the plan (repro.analysis) "
+                         "before executing; abort on any error-level "
+                         "finding (docs/analysis.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -471,6 +522,7 @@ def main() -> None:
         vstages=args.vstages,
         microbatches=args.microbatches,
         netprof_db=args.netprof_db,
+        analyze=args.analyze,
         ckpt_dir=args.ckpt_dir,
         restore_from=not args.no_restore,
     )

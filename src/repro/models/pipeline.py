@@ -291,7 +291,7 @@ def microbatched_reference(model, microbatches: int):
         micro = split_microbatches(batch, microbatches)
         total = 0.0
         for m in range(microbatches):
-            mb = jax.tree_util.tree_map(lambda a: a[m], micro)
+            mb = jax.tree_util.tree_map(lambda a, m=m: a[m], micro)
             lval, _metrics = model.loss(params, mb)
             total = total + lval
         return total / microbatches

@@ -229,7 +229,7 @@ def sweep_collectives(
             ),
             "payload_bytes": sorted(
                 set(meta.get("payload_bytes", []))
-                | set(int(p) for p in cfg.payload_bytes)
+                | {int(p) for p in cfg.payload_bytes}
             ),
             # recount from the DB rather than accumulating the raw
             # measurement count: re-calibration REPLACES same-key entries,

@@ -1,0 +1,495 @@
+"""Static plan verifier (repro.analysis): malformed-plan corpus + wiring.
+
+Every test here feeds the analyzer a plan broken in one specific way and
+asserts the *diagnostic code* that names the defect — the codes are the
+stable API (the autotuner's pruner, CI's analyze gate, and the launcher
+all key on them).  The corpus covers each plan representation:
+
+  * graphs   — cycle (G005), dangling dep (G003), self-dep (G004);
+  * accounting — unpriceable collective (A001), zero payload (A002),
+    silent ring fallback despite a netprof DB (A003);
+  * schedules — misplacement (S001), deadlock with the wait chain named
+    (S005/S006), incompleteness (S003), illegal shapes (S012/S013);
+  * executor plans — unpaired/misrouted ppermutes (S007/S008), send-count
+    twin mismatch (S011);
+  * timelines — serialization (T001), causality (T002), invalid intervals
+    (T003/T004), and the link-overlap audit metric (T010).
+
+tests/test_analysis_dynamic.py confirms (slow tier) that a statically
+flagged executor plan really does corrupt a multi-device run.
+"""
+import json
+import math
+
+import pytest
+
+from repro.analysis import (
+    DIAGNOSTIC_CODES,
+    PlanVerificationError,
+    Report,
+    analyze_training_plan,
+    find_cycle,
+    lint_executor_plan,
+    lint_graph,
+    lint_schedule,
+    lint_strategy,
+)
+from repro.analysis.timeline_checks import audit_timeline
+from repro.configs.base import get_config
+from repro.core.graph import DataflowGraph, GraphInvariantError, OpNode
+from repro.core.simulator import SimEvent, SimResult, simulate
+from repro.core.strategy import Strategy
+from repro.dist.schedules import PipelineSchedule, Step, build_executor_plan, make_schedule
+
+
+def _raw_graph(specs):
+    """Hand-build a graph bypassing DataflowGraph.add's forward-dep guard
+    (the corpus needs cycles the builder rightly forbids)."""
+    g = DataflowGraph("corpus")
+    for uid, (name, deps, kw) in enumerate(specs):
+        g.nodes.append(
+            OpNode(uid=uid, name=name, kind=kw.pop("kind", "op"),
+                   deps=list(deps), **kw)
+        )
+    return g
+
+
+# ---------------------------------------------------------------------------
+# graph structure lints
+# ---------------------------------------------------------------------------
+
+def test_cycle_flagged_and_named_g005():
+    g = _raw_graph([("a", [1], {}), ("b", [0], {}), ("c", [1], {})])
+    cyc = find_cycle(g.nodes)
+    assert cyc is not None and cyc[0] == cyc[-1]
+    report = lint_graph(g)
+    assert not report.ok
+    assert "G005" in report.codes()
+    (diag,) = report.by_code("G005")
+    # the cycle is *named* — the whole point over "simulated X/N nodes"
+    assert "a" in diag.message and "b" in diag.message
+    assert "->" in diag.message
+
+
+def test_dangling_dep_g003():
+    g = _raw_graph([("a", [], {}), ("b", [7], {})])
+    report = lint_graph(g)
+    assert "G003" in report.codes()
+    (diag,) = report.by_code("G003")
+    assert "'b'" in diag.message and diag.where["dep"] == 7
+    # a dangling dep is not a cycle
+    assert "G005" not in report.codes()
+
+
+def test_self_dep_g004():
+    g = _raw_graph([("a", [0], {})])
+    assert "G004" in lint_graph(g).codes()
+
+
+def test_clean_graph_passes():
+    g = DataflowGraph("ok")
+    a = g.add("a", "op")
+    g.add("b", "op", deps=[a.uid])
+    report = lint_graph(g)
+    assert report.ok and find_cycle(g.nodes) is None
+    assert report.metrics["graph_nodes"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# DataflowGraph.validate — raised invariants, not bare asserts
+# ---------------------------------------------------------------------------
+
+def test_validate_names_offending_node():
+    g = DataflowGraph("bad")
+    g.nodes.append(OpNode(uid=0, name="ok", kind="op"))
+    g.nodes.append(OpNode(uid=1, name="broken", kind="op", deps=[5]))
+    with pytest.raises(GraphInvariantError) as ei:
+        g.validate()
+    assert "'broken'" in str(ei.value) and "undefined uid 5" in str(ei.value)
+    # callers that caught ValueError keep working
+    assert issubclass(GraphInvariantError, ValueError)
+
+
+def test_validate_rejects_duplicate_and_forward_uids():
+    g = DataflowGraph("dup")
+    g.nodes.append(OpNode(uid=0, name="a", kind="op"))
+    g.nodes.append(OpNode(uid=0, name="a2", kind="op"))
+    with pytest.raises(GraphInvariantError, match="reuses uid 0"):
+        g.validate()
+    g2 = _raw_graph([("x", [1], {}), ("y", [], {})])
+    with pytest.raises(GraphInvariantError, match="topological order"):
+        g2.validate()
+
+
+def test_simulator_cycle_error_names_unreached_nodes():
+    g = _raw_graph([("a", [1], {}), ("b", [0], {}), ("c", [1], {})])
+    with pytest.raises(RuntimeError) as ei:
+        simulate(g, lambda n: 1.0)
+    msg = str(ei.value)
+    assert "simulated 0/3 nodes" in msg
+    assert "unreached nodes" in msg and "dependency cycle" in msg
+    assert "a" in msg and "b" in msg
+
+
+# ---------------------------------------------------------------------------
+# accounting completeness
+# ---------------------------------------------------------------------------
+
+def test_unpriceable_collective_a001():
+    g = DataflowGraph("acct")
+    g.add("grads", "add")
+    # pp_hop annotation missing its dtype: dist_comm_bytes cannot resolve it
+    g.add(
+        "hop", "collective-permute", deps=[0], link_kind="ici",
+        group_size=2, meta={"pp_hop": {"shape": (2, 16)}},
+    )
+    report = lint_graph(g)
+    assert "A001" in report.codes()
+    (diag,) = report.by_code("A001")
+    assert diag.where["meta_keys"] == ["pp_hop"]
+
+
+def test_zero_payload_collective_a002_is_warning():
+    g = DataflowGraph("acct0")
+    g.add("ar", "all-reduce", link_kind="ici", group_size=4, comm_bytes=0.0)
+    report = lint_graph(g)
+    assert "A002" in report.codes()
+    assert report.ok  # warning, not error
+
+
+def test_ring_fallback_with_db_a003():
+    from repro.core.database import ProfileDB
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.hardware import TPU_V5E
+
+    est = OpTimeEstimator(TPU_V5E, db=ProfileDB(), use_learned=False)
+    assert est.collective_pricer is not None
+    g = DataflowGraph("ring")
+    node = g.add(
+        "ar", "all-reduce", link_kind="ici", group_size=4, comm_bytes=4096.0
+    )
+    report = lint_graph(g, estimator=est)
+    assert "A003" in report.codes()
+    assert node.meta["time_provenance"] == "ring"
+    # without a DB there is nothing to fall back from: clean
+    assert lint_graph(g, estimator=OpTimeEstimator(TPU_V5E)).ok
+
+
+# ---------------------------------------------------------------------------
+# schedule static checks
+# ---------------------------------------------------------------------------
+
+class _TamperedSchedule(PipelineSchedule):
+    """Wraps a real schedule, mutating per-device step lists on the way out."""
+
+    name = "tampered"
+
+    def __init__(self, base, mutate):
+        super().__init__(base.n_stages, base.n_microbatches, base.vstages)
+        self._mutate = mutate
+        self._base = base
+
+    def stage_steps(self, stage):
+        return self._mutate(stage, list(self._base.stage_steps(stage)))
+
+
+def test_well_formed_schedules_lint_clean():
+    for name, S, M, v in (("gpipe", 4, 8, 1), ("1f1b", 4, 8, 1),
+                          ("interleaved_1f1b", 4, 8, 2)):
+        sch = make_schedule(name, S, M, v)
+        report = lint_schedule(sch)
+        assert report.ok, (name, report.codes())
+        assert report.metrics["schedule_total_ticks"] == sch.total_ticks()
+        assert report.metrics["schedule_comm_steps"] == sch.comm_steps()
+
+
+def test_dropped_step_s003_and_deadlock_s005():
+    base = make_schedule("1f1b", 2, 2, 1)
+
+    def drop_first_fwd(stage, steps):
+        return steps[1:] if stage == 0 else steps
+
+    report = lint_schedule(_TamperedSchedule(base, drop_first_fwd))
+    codes = report.codes()
+    assert "S003" in codes and "S005" in codes
+    (diag,) = report.by_code("S005")
+    # the wait chain is named: who is stuck, on which device, waiting on what
+    assert "waits for" in diag.message
+
+
+def test_bwd_before_fwd_s006():
+    base = make_schedule("1f1b", 2, 2, 1)
+
+    def swap_last_stage(stage, steps):
+        if stage == 1:
+            steps[0], steps[1] = steps[1], steps[0]  # B before its F
+        return steps
+
+    report = lint_schedule(_TamperedSchedule(base, swap_last_stage))
+    codes = report.codes()
+    assert "S006" in codes and "S005" in codes
+
+
+def test_misplaced_step_s001():
+    base = make_schedule("gpipe", 2, 2, 1)
+
+    def misplace(stage, steps):
+        if stage == 0:
+            # claim stage 1's first forward on device 0
+            steps[0] = Step(0, 1, 0, steps[0].phase)
+        return steps
+
+    report = lint_schedule(_TamperedSchedule(base, misplace))
+    assert "S001" in report.codes()
+
+
+def test_strategy_shape_pruning_s012_s013():
+    # interleaved needs microbatches divisible by stages: 6 % 4 != 0
+    r = lint_strategy(
+        Strategy(pp=4, microbatches=6, schedule="interleaved_1f1b", vstages=2),
+        n_layers=16,
+    )
+    assert r.codes() == ["S012"]
+    # 10 layers cannot split over 4x2 virtual stages
+    r = lint_strategy(
+        Strategy(pp=4, microbatches=8, schedule="interleaved_1f1b", vstages=2),
+        n_layers=10,
+    )
+    assert r.codes() == ["S013"]
+    # a legal strategy extends into the full table lint
+    r = lint_strategy(Strategy(pp=4, microbatches=8), n_layers=16)
+    assert r.ok and "schedule_total_ticks" in r.metrics
+
+
+# ---------------------------------------------------------------------------
+# executor-plan ppermute pairing
+# ---------------------------------------------------------------------------
+
+def _first_true(table, n_stages):
+    for t, row in enumerate(table):
+        for s in range(n_stages):
+            if row[s]:
+                return t, s
+    raise AssertionError("no set entry found")
+
+
+def test_executor_plans_pair_cleanly():
+    for name, S, M, v in (("gpipe", 4, 8, 1), ("1f1b", 4, 8, 1),
+                          ("interleaved_1f1b", 4, 8, 2)):
+        sch = make_schedule(name, S, M, v)
+        report = lint_executor_plan(build_executor_plan(sch))
+        assert report.ok, (name, report.codes())
+        assert report.metrics["executor_sends_per_direction"] == sch.comm_steps()
+
+
+def test_zeroed_receive_is_unpaired_s007():
+    sch = make_schedule("1f1b", 4, 8, 1)
+    plan = build_executor_plan(sch)
+    t, s = _first_true(plan.recv_fwd_valid, sch.n_stages)
+    plan.recv_fwd_valid[t][s] = 0  # the corruption the executor deadlocks on
+    report = lint_executor_plan(plan)
+    assert "S007" in report.codes()
+    (diag,) = report.by_code("S007")
+    assert diag.where["dst"] == s and diag.where["tick"] == t - 1
+
+
+def test_misrouted_receive_s008():
+    sch = make_schedule("interleaved_1f1b", 4, 8, 2)
+    plan = build_executor_plan(sch)
+    t, s = _first_true(plan.recv_fwd_valid, sch.n_stages)
+    plan.recv_fwd_mb[t][s] += 1  # stores into the wrong microbatch slot
+    assert "S008" in lint_executor_plan(plan).codes()
+
+
+def test_dropped_send_breaks_the_comm_twin_s011():
+    sch = make_schedule("gpipe", 4, 8, 1)
+    plan = build_executor_plan(sch)
+    t, s = _first_true(plan.sends_fwd, sch.n_stages)
+    plan.sends_fwd[t][s] = 0
+    codes = lint_executor_plan(plan).codes()
+    # the orphaned receive AND the send-count accounting twin both fire
+    assert "S008" in codes and "S011" in codes
+
+
+# ---------------------------------------------------------------------------
+# timeline (DES) audit
+# ---------------------------------------------------------------------------
+
+def _result(events, makespan):
+    return SimResult(makespan=makespan, device_busy={}, events=events,
+                     time_by_kind={})
+
+
+def test_device_overlap_t001():
+    res = _result([
+        SimEvent(0, "a", "op", "chip", 0.0, 1.0),
+        SimEvent(1, "b", "op", "chip", 0.5, 1.5),
+    ], 1.5)
+    report = audit_timeline(res)
+    assert "T001" in report.codes()
+    (diag,) = report.by_code("T001")
+    assert diag.where["conflicts_with"] == "a"
+
+
+def test_causality_violation_t002():
+    g = DataflowGraph("causal")
+    g.add("a", "op", device="stage0")
+    g.add("b", "op", deps=[0], device="stage1")
+    res = _result([
+        SimEvent(0, "a", "op", "stage0", 0.0, 1.0),
+        SimEvent(1, "b", "op", "stage1", 0.5, 1.5),
+    ], 1.5)
+    report = audit_timeline(res, g)
+    assert report.codes() == ["T002"]
+
+
+def test_invalid_intervals_t003_t004():
+    res = _result([
+        SimEvent(0, "neg", "op", "chip", 1.0, 0.5),
+        SimEvent(1, "nan", "op", "chip", 0.0, math.nan),
+        SimEvent(2, "runaway", "op", "chip", 0.0, 9.0),
+    ], 2.0)
+    codes = audit_timeline(res).codes()
+    assert "T003" in codes and "T004" in codes
+
+
+def test_link_overlap_audit_t010():
+    res = _result([
+        SimEvent(0, "pp", "collective-permute", "link:pp", 0.0, 1.0),
+        SimEvent(1, "dp", "all-reduce", "link:dp0", 0.5, 1.5),
+    ], 2.0)
+    report = audit_timeline(res)
+    assert report.ok  # an audit, not an invariant
+    assert "T010" in report.codes()
+    assert report.metrics["link_overlap_s"] == pytest.approx(0.5)
+    assert report.metrics["link_overlap_fraction"] == pytest.approx(0.25)
+
+
+def test_real_simulated_timeline_is_clean():
+    from repro.core.autotuner import layer_cost_from_config
+    from repro.core.strategy import pipeline_graph
+
+    cfg = get_config("llama3.2-1b")
+    cost = layer_cost_from_config(cfg, 1, 128, 1)
+    g = pipeline_graph(cfg.num_layers, cost, Strategy(pp=4, microbatches=8))
+    res = simulate(g, lambda n: 1e-3, record_events=True)
+    report = audit_timeline(res, g)
+    assert report.ok
+    assert not any(c.startswith("T00") for c in report.codes())
+
+
+# ---------------------------------------------------------------------------
+# diagnostics engine
+# ---------------------------------------------------------------------------
+
+def test_report_json_roundtrip(tmp_path):
+    report = Report("unit")
+    report.error("G003", "node 'b' depends on undefined uid 7", node=1, dep=7)
+    report.warning("A002", "zero payload")
+    report.info("T010", "links overlap")
+    report.metrics["graph_nodes"] = 2.0
+    path = tmp_path / "report.json"
+    report.to_json(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["ok"] is False
+    assert doc["counts"] == {"error": 1, "warning": 1, "info": 1}
+    assert doc["metrics"]["graph_nodes"] == 2.0
+    codes = [f["code"] for f in doc["findings"]]
+    assert codes == ["G003", "A002", "T010"]
+    assert doc["findings"][0]["where"] == {"node": 1, "dep": 7}
+    # every emitted code carries its registered description
+    assert doc["findings"][0]["description"] == DIAGNOSTIC_CODES["G003"]
+
+
+def test_unregistered_code_rejected():
+    with pytest.raises(KeyError, match="Z999"):
+        Report().error("Z999", "made-up code")
+
+
+def test_raise_on_errors_carries_the_report():
+    report = Report("boom")
+    report.error("G005", "dependency cycle: a -> b -> a")
+    with pytest.raises(PlanVerificationError) as ei:
+        report.raise_on_errors()
+    assert ei.value.report is report
+    assert "G005" in str(ei.value)
+    assert Report("fine").raise_on_errors().ok
+
+
+# ---------------------------------------------------------------------------
+# wiring: autotuner pruning + whole-plan entry points
+# ---------------------------------------------------------------------------
+
+def test_autotuner_prunes_statically_with_attribution():
+    from repro.core.autotuner import Autotuner
+
+    cfg = get_config("llama3.2-1b")
+    tuner = Autotuner(cfg=cfg, chips=8, global_batch=32, seq=128)
+    kept = tuner.candidates()
+    stats = tuner.prune_stats
+    assert stats["enumerated"] == len(kept) + stats["pruned"]
+    assert stats["pruned"] > 0
+    # the pruned class: interleaved tables whose microbatch count the
+    # stage count does not divide (S012) — attributed, not silently skipped
+    assert stats["by_code"].get("S012", 0) > 0
+    assert all(code in DIAGNOSTIC_CODES for code in stats["by_code"])
+    for st in kept:
+        assert lint_strategy(st, cfg.num_layers).ok, st.describe()
+
+
+def test_autotuner_prunes_unpartitionable_layers_s013():
+    from repro.core.autotuner import Autotuner
+
+    # 61 layers are prime: every interleaved (and pp=2/4/8 gpipe) split is
+    # statically impossible and must be attributed to S013
+    tuner = Autotuner(cfg=get_config("kimi-k2-1t-a32b"), chips=8,
+                      global_batch=32, seq=128)
+    kept = tuner.candidates()
+    assert tuner.prune_stats["by_code"].get("S013", 0) > 0
+    assert all(st.pp * st.vstages == 1 for st in kept)
+
+
+def test_autotuner_search_logs_prune_line():
+    from repro.core.autotuner import Autotuner
+
+    tuner = Autotuner(cfg=get_config("llama3.2-1b"), chips=4,
+                      global_batch=8, seq=64)
+    lines = []
+    results = tuner.search(log_fn=lines.append, max_pp=4,
+                           microbatch_options=(4,))
+    assert results and results[0].makespan_s > 0
+    assert any("static pruning rejected" in line for line in lines)
+
+
+def test_analyze_training_plan_clean_end_to_end():
+    cfg = get_config("llama3.2-1b")
+    report = analyze_training_plan(
+        cfg, Strategy(pp=4, microbatches=8), micro_batch=1, seq=128
+    )
+    assert report.ok, report.codes()
+    assert report.metrics["sim_makespan_s"] > 0
+    assert report.metrics["schedule_total_ticks"] > 0
+    assert report.metrics["graph_collectives"] > 0
+
+
+def test_analyze_training_plan_stops_at_first_broken_phase():
+    cfg = get_config("llama3.2-1b")
+    report = analyze_training_plan(
+        cfg, Strategy(pp=4, microbatches=6, schedule="interleaved_1f1b",
+                      vstages=2),
+        micro_batch=1, seq=128,
+    )
+    assert report.codes() == ["S012"]
+    # the sim never ran on a plan that cannot schedule
+    assert "sim_makespan_s" not in report.metrics
+
+
+def test_analyze_all_configs_sweep_is_clean():
+    from repro.analysis import analyze_all_configs
+    from repro.configs.base import list_archs
+
+    merged = analyze_all_configs(run_sim=False, seq=64)
+    assert merged.ok, merged.codes()
+    # prime layer counts degrade to a smaller pp rather than dropping the
+    # config: at least two schedule families per registered arch
+    assert merged.metrics["plans_analyzed"] >= 2 * len(list_archs())

@@ -1,0 +1,104 @@
+"""Dynamic confirmation of a statically-flagged executor plan (slow tier).
+
+The static analyzer (tests/test_analysis.py) flags a corrupted executor
+plan — one forward receive zeroed out — as S007 without running anything.
+This test proves the flag is *true*: the same corrupted plan, fed to the
+real scheduled shard_map executor over 4 forced host devices, silently
+drops an activation and produces a loss/gradients that diverge from the
+sequential autodiff reference, while the untampered plan matches it.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+
+    from repro.analysis.schedule_checks import lint_executor_plan
+    from repro.dist import pp as pp_mod
+    from repro.dist.schedules import build_executor_plan, make_schedule
+
+    rng = np.random.default_rng(0)
+    L, M, B, D = 4, 4, 2, 8
+    w = jnp.asarray(rng.standard_normal((L, D, D)), jnp.float32) * 0.2
+    xs = jnp.asarray(rng.standard_normal((M, B, D)), jnp.float32)
+    layer_fn = lambda p, x: jnp.tanh(x @ p["w"])
+
+    sch = make_schedule("1f1b", 4, M, 1)
+    good = build_executor_plan(sch)
+    bad = build_executor_plan(sch)
+    # zero the first forward receive: stage 1 now consumes zeros for mb 0
+    t, s = next(
+        (t, s)
+        for t in range(bad.n_ticks)
+        for s in range(sch.n_stages)
+        if bad.recv_fwd_valid[t][s]
+    )
+    bad.recv_fwd_valid[t][s] = 0
+
+    # static: the analyzer names the defect before anything runs
+    rep = lint_executor_plan(bad)
+    assert not rep.ok and "S007" in rep.codes(), rep.codes()
+    assert lint_executor_plan(good).ok
+    print("static_flagged_ok")
+
+    # dynamic: the same two plans through the real executor
+    def seq_loss(w_):
+        def stack(x):
+            for i in range(L):
+                x = jnp.tanh(x @ w_[i])
+            return x
+        ys = jax.vmap(stack)(xs)
+        return 0.5 * jnp.sum(ys * ys)
+
+    ref_loss = float(seq_loss(w))
+    ref_grad = np.asarray(jax.grad(seq_loss)(w))
+    mesh = jax.make_mesh((4,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    orig = pp_mod.build_executor_plan
+    def run_with(plan):
+        pp_mod.build_executor_plan = lambda _sch, _p=plan: _p
+        try:
+            loss, _outs, grads = jax.jit(
+                lambda p, x: pp_mod.pipeline_schedule_shard_map(
+                    p, x, layer_fn, mesh, sch
+                )
+            )({"w": w}, xs)
+        finally:
+            pp_mod.build_executor_plan = orig
+        loss_ok = abs(float(loss) - ref_loss) < 1e-4 * abs(ref_loss)
+        grad_ok = bool(np.allclose(np.asarray(grads["w"]), ref_grad,
+                                   rtol=1e-4, atol=1e-4))
+        return loss_ok, grad_ok
+
+    assert run_with(good) == (True, True), "untampered plan must match"
+    loss_ok, grad_ok = run_with(bad)
+    assert not (loss_ok and grad_ok), (
+        "statically-flagged plan still matched the reference"
+    )
+    print("dynamic_diverged_ok")
+    """
+)
+
+
+@pytest.mark.slow
+def test_flagged_plan_diverges_on_real_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    for marker in ("static_flagged_ok", "dynamic_diverged_ok"):
+        assert marker in out.stdout, (marker, out.stdout, out.stderr[-1500:])

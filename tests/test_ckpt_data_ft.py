@@ -125,7 +125,8 @@ def test_data_deterministic():
 
 
 def test_data_hosts_disjoint():
-    kw = dict(vocab_size=1000, seq_len=64, global_batch=8, num_hosts=2)
+    kw = {"vocab_size": 1000, "seq_len": 64, "global_batch": 8,
+          "num_hosts": 2}
     h0 = SyntheticTokens(host_id=0, **kw).batch_at(0)
     h1 = SyntheticTokens(host_id=1, **kw).batch_at(0)
     assert not np.array_equal(h0["tokens"], h1["tokens"])
@@ -204,7 +205,7 @@ def test_plan_remesh_too_small_raises():
 def test_straggler_policy_escalates():
     mon = StepTimeMonitor(window=8)
     pol = StragglerPolicy(slow_factor=1.5, evict_after=2)
-    for step in range(4):
+    for _step in range(4):
         for h in range(4):
             mon.record(h, 1.0 if h != 2 else 3.0)
         verdict = pol.assess(mon)

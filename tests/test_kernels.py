@@ -11,9 +11,9 @@ from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
 
 def tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
-        rtol=2e-5, atol=2e-5
-    )
+    if dtype == jnp.bfloat16:
+        return {"rtol": 2e-2, "atol": 2e-2}
+    return {"rtol": 2e-5, "atol": 2e-5}
 
 
 # -- flash attention -------------------------------------------------------------
@@ -98,9 +98,10 @@ def test_ssd_scan_sweep(rng, b, s, h, p, n, chunk, dtype):
     A = jnp.asarray(-np.exp(rng.standard_normal(h)), jnp.float32)
     y, st = ssd_scan(x, B, C, dt, A, chunk=chunk)
     yr, str_ = ssd_scan_ref(x, B, C, dt, A, chunk)
-    t = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(
-        rtol=2e-4, atol=2e-4
-    )
+    if dtype == jnp.bfloat16:
+        t = {"rtol": 5e-2, "atol": 5e-2}
+    else:
+        t = {"rtol": 2e-4, "atol": 2e-4}
     np.testing.assert_allclose(
         np.asarray(y, np.float32), np.asarray(yr, np.float32), **t
     )

@@ -42,10 +42,10 @@ SHAPE = ShapeConfig("pipe_test", 16, 4, "train")
 
 def _tiny(name, **kw):
     cfg = smoke_variant(get_config(name))
-    changes = dict(
-        num_layers=4, d_model=64, num_heads=2, num_kv_heads=2,
-        head_dim=32, d_ff=128 if cfg.d_ff else 0, vocab_size=256,
-    )
+    changes = {
+        "num_layers": 4, "d_model": 64, "num_heads": 2, "num_kv_heads": 2,
+        "head_dim": 32, "d_ff": 128 if cfg.d_ff else 0, "vocab_size": 256,
+    }
     changes.update(kw)
     return dataclasses.replace(cfg, **changes)
 

@@ -109,7 +109,7 @@ def test_loss_decreases_over_steps():
     state, _ = init_state(model, jax.random.PRNGKey(0), opt)
     batch = make_concrete_batch(cfg, smoke_shape("train"))
     first = last = None
-    for i in range(6):
+    for _ in range(6):
         state, metrics = step(state, batch)
         if first is None:
             first = float(metrics["loss"])

@@ -179,4 +179,4 @@ def test_step_table_is_tick_ordered():
         key=lambda k: (ticks[Step(k[1] % 4, k[1], k[2], k[0])],
                        (k[1] % 4)),
     )
-    assert len(order) == len(set(s.key for s in order))
+    assert len(order) == len({s.key for s in order})
