@@ -18,14 +18,19 @@ the CPU backend:
 Beyond the paper's table, ``schedule_rows`` cross-checks the pipeline
 schedule layer: for gpipe / 1f1b / interleaved-1f1b the DES makespan and
 bubble must match the schedule's own tick-table accounting (the executor
-twin) and the analytic ``2Mv + 2(S-1)`` closed form.  ``--smoke`` runs only
-these rows (no jit, sub-second) so CI can gate on schedule-accuracy
-regressions.
+twin) and the analytic ``2Mv + 2(S-1)`` closed form.  ``serve_rows``
+prices the committed serving acceptance trace
+(``benchmarks/traces/serve_acceptance.json``) through the DES serving twin
+on the synthetic serve-cost grid — fully deterministic, so the latency
+percentiles pin bit-exact in the bench-gate baseline.  ``--smoke`` runs
+only these two row sets (no jit, sub-second) so CI can gate on
+schedule/serve regressions.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 
@@ -104,6 +109,50 @@ def schedule_rows() -> list[dict]:
             }
         )
     return rows
+
+
+def serve_rows() -> list[dict]:
+    """Serving-twin accuracy pins: price the committed acceptance trace
+    from the synthetic serve grid.  Everything is deterministic (explicit
+    seeds, nearest-rank percentiles, exact-JSON trace), so these gate with
+    zero tolerance — any drift means the scheduler policy, the pricing
+    chain, or the trace vocabulary changed behaviour."""
+    from repro.configs.base import get_config, smoke_variant
+    from repro.core.database import ProfileDB
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.hardware import CPU_HOST
+    from repro.serve.cost import synthetic_serve_calibration
+    from repro.serve.policy import ServeConfig
+    from repro.serve.sim import simulate_serve
+    from repro.serve.trace import load_trace
+
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+    db = ProfileDB()
+    synthetic_serve_calibration(
+        db, cfg.name, "cpu_host", views=(scfg.view_len,), slot_grid=(1, 2, 4)
+    )
+    est = OpTimeEstimator(CPU_HOST, db=db, use_learned=False)
+    trace = load_trace(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "traces", "serve_acceptance.json")
+    )
+    res = simulate_serve(trace, cfg, scfg, est, name="serve-bench")
+    lat = res.latency
+    derived = f"requests={lat['requests']};tokens={lat['total_tokens']}"
+    return [
+        {"name": "serve_sim_steps", "value": float(len(res.step_log)),
+         "tol_rel": 0.0, "tol_abs": 0.0, "derived": derived},
+        {"name": "serve_sim_makespan_us", "value": lat["makespan_s"] * 1e6,
+         "tol_rel": 0.0, "tol_abs": 0.0, "derived": derived},
+        {"name": "serve_sim_ttft_p50_us", "value": lat["ttft_p50_s"] * 1e6,
+         "tol_rel": 0.0, "tol_abs": 0.0, "derived": derived},
+        {"name": "serve_sim_per_token_p99_us",
+         "value": lat["per_token_p99_s"] * 1e6,
+         "tol_rel": 0.0, "tol_abs": 0.0, "derived": derived},
+        {"name": "serve_sim_e2e_p99_us", "value": lat["e2e_p99_s"] * 1e6,
+         "tol_rel": 0.0, "tol_abs": 0.0, "derived": derived},
+    ]
 
 
 def run(steps: int = 12, profile_repeats: int = 5) -> list[dict]:
@@ -201,8 +250,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--smoke", action="store_true",
-        help="schedule-accuracy rows only (fast, no jit; the CI gate)",
+        help="schedule + serve accuracy rows only (fast, no jit; the CI "
+             "gate)",
     )
     args = ap.parse_args()
-    for r in schedule_rows() if args.smoke else run():
+    rows = schedule_rows() if args.smoke else run()
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+    for r in serve_rows():
+        print(f"{r['name']},{r['value']:.2f},{r['derived']}")

@@ -6,8 +6,14 @@
 # Modes:
 #   check.sh             fast tier (default)
 #   check.sh slow        subprocess tier (forced multi-device hosts, incl.
-#                        the pipeline launcher on a real 4-stage mesh)
-#   check.sh determinism standalone estimator reproducibility gate
+#                        the pipeline launcher on a real 4-stage mesh and
+#                        the slot-sharded 8-device serving engine)
+#   check.sh determinism standalone reproducibility gates: estimator
+#                        time-model fits + the priced serving report
+#   check.sh serve       serving parity gate: offline-calibrate the serve
+#                        step primitives, then engine vs DES twin on the
+#                        committed acceptance trace (exact composition
+#                        parity; priced latency within tolerance)
 #   check.sh docs        markdown links + schedule-accuracy smoke
 #   check.sh bench       benchmark-regression gate vs the committed baseline
 #   check.sh netprof     interconnect-calibration smoke: sweep the 8-device
@@ -39,9 +45,29 @@ fi
 
 if [[ "${1:-}" == "determinism" ]]; then
     # same-DB-twice across processes with different hash salts — guards the
-    # stable-digest seeding of the per-family time-model fits
+    # stable-digest seeding of the per-family time-model fits, and the
+    # bit-identical priced serving report from the synthetic serve grid
     exec python -m pytest -q \
-        tests/test_estimator_db.py::test_estimator_deterministic_across_processes
+        tests/test_estimator_db.py::test_estimator_deterministic_across_processes \
+        tests/test_serve_sim.py::test_sim_deterministic_across_processes
+fi
+
+if [[ "${1:-}" == "serve" ]]; then
+    # serving parity gate (slow CI): measure the serve-step primitives
+    # offline into a ProfileDB — in the deployed placement: a forced
+    # 8-device host with the decode batch slot-sharded, so calibration
+    # pays the same replicated-prefill/cross-device costs the engine
+    # will — then drive the committed acceptance trace through the real
+    # continuous-batching engine AND the scheduler twin — step
+    # compositions must match exactly; priced latency percentiles must
+    # land within tolerance.  Writes SERVE_parity.json (CI artifact).
+    DB="${SERVE_DB:-serve_db.json}"
+    SERVE_ARGS=(--arch llama3.2-1b --smoke --slots 8 --max-len 64
+                --block-size 8 --chunk 8 --force-host-devices 8 --shard)
+    python -m repro.launch.serve "${SERVE_ARGS[@]}" --calibrate --db "$DB"
+    exec python -m repro.launch.serve "${SERVE_ARGS[@]}" \
+        --trace-file benchmarks/traces/serve_acceptance.json \
+        --parity --db "$DB" --tol-rel 0.6 --report SERVE_parity.json
 fi
 
 if [[ "${1:-}" == "docs" ]]; then

@@ -42,4 +42,7 @@ from repro.analysis.schedule_checks import (  # noqa: F401
     lint_schedule,
     lint_strategy,
 )
-from repro.analysis.timeline_checks import audit_timeline  # noqa: F401
+from repro.analysis.timeline_checks import (  # noqa: F401
+    audit_serve_timeline,
+    audit_timeline,
+)

@@ -41,6 +41,7 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "A001": "collective not resolvable by estimator.dist_comm_bytes",
     "A002": "collective resolves to zero payload bytes with group_size > 1",
     "A003": "collective silently ring-priced despite a supplied netprof DB",
+    "A004": "priced serve node missing time_provenance",
     # -- schedule static checks (repro.analysis.schedule_checks) -----------
     "S001": "step scheduled on the wrong device for its virtual stage",
     "S002": "duplicate step in the table",

@@ -147,3 +147,41 @@ def audit_timeline(
             windows=len(windows),
         )
     return report
+
+
+def audit_serve_timeline(
+    result: SimResult,
+    graph: DataflowGraph,
+    name: Optional[str] = None,
+) -> Report:
+    """Serve-sim audit: the generic timeline invariants plus A004.
+
+    A004: every serve-annotated node the estimator priced must carry a
+    ``time_provenance`` stamp (``measured-db`` / ``measured-fit`` /
+    ``analytic``) — a missing stamp means a serve node slipped past the
+    serve pricing chain and was costed by some other path, which would
+    silently decouple the twin's percentiles from the profiled data.
+    Provenance counts land in the report metrics so launch reports can
+    show measured-vs-analytic coverage.
+    """
+    report = audit_timeline(result, graph, name or "serve-timeline")
+    n_serve = 0
+    prov_counts: dict[str, int] = {}
+    for node in graph.nodes:
+        if node.meta.get("serve") is None:
+            continue
+        n_serve += 1
+        prov = node.meta.get("time_provenance")
+        if prov is None:
+            report.error(
+                "A004",
+                f"serve node {node.name!r} ({node.kind}) was simulated "
+                "without a time_provenance stamp",
+                node=node.uid, name=node.name, kind=node.kind,
+            )
+        else:
+            prov_counts[prov] = prov_counts.get(prov, 0) + 1
+    report.metrics["serve_nodes"] = float(n_serve)
+    for prov, c in sorted(prov_counts.items()):
+        report.metrics[f"serve_prov_{prov}"] = float(c)
+    return report

@@ -230,6 +230,10 @@ class OpTimeEstimator:
         # measured-collective pricing chain (repro.netprof): exact DB hit ->
         # fitted CollectiveModel -> ring fallback, with per-node provenance
         self.collective_pricer = None
+        # measured-serve pricing chain (repro.serve.cost), built lazily on
+        # the first serve-annotated node so non-serving estimators never
+        # import the serve package
+        self._serve_pricer = None
         self.dispatch_s = 0.0
         self.op_overhead_s = 0.0
         if db is not None:
@@ -278,6 +282,9 @@ class OpTimeEstimator:
     def duration(self, node: OpNode) -> float:
         if node.is_collective:
             return self._collective(node)
+        sv = node.meta.get("serve")
+        if sv is not None:
+            return self._serve(node, sv)
         if node.flops == 0 and node.bytes_accessed == 0:
             return 0.0
         # 1. exact DB hit — either op-family args or a (flops, bytes)
@@ -342,6 +349,31 @@ class OpTimeEstimator:
                 )
             return base
         return base + self.dispatch_s
+
+    def _serve(self, node: OpNode, sv: dict) -> float:
+        """Serve-step pricing chain: exact DB hit -> interpolated ServePricer
+        curve -> analytic roofline on the node's flops/bytes.  The winning
+        stage lands in ``node.meta["time_provenance"]`` (the serve audit's
+        A004 gate requires every priced serve node to carry one)."""
+        from repro.netprof.pricing import PROV_ANALYTIC, PROV_DB
+
+        if self.db is not None:
+            from repro.serve.cost import _XKEY, ServePricer
+
+            if self._serve_pricer is None:
+                self._serve_pricer = ServePricer(self.db, self.platform.name)
+            res = self._serve_pricer.price(
+                sv["family"], sv["arch"],
+                int(sv[_XKEY[sv["family"]]]), int(sv["view"]),
+            )
+            if res is not None:
+                t, prov = res
+                node.meta["time_provenance"] = prov
+                self.stats["db" if prov == PROV_DB else "learned"] += 1
+                return t
+        node.meta["time_provenance"] = PROV_ANALYTIC
+        self.stats["analytic"] += 1
+        return self._analytic(node)
 
     def _collective(self, node: OpNode) -> float:
         """Measured pricing chain: exact DB hit -> fitted CollectiveModel ->

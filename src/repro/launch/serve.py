@@ -1,61 +1,307 @@
-"""Serving driver: batched continuous decoding on the ServeEngine.
+"""Serving driver: continuous-batching engine + its DES twin on one trace.
 
+Modes (composable):
+
+    # real engine over a Poisson trace, latency percentiles
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --requests 8 --new-tokens 16
+        --trace poisson --requests 8 --rate 50
+
+    # DES twin only — price the trace from a serve-calibrated DB, never
+    # building the model (the paper's offline-simulation pitch, serving
+    # edition); --synthetic-db prices from the deterministic linear grid
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        --trace-file benchmarks/traces/serve_acceptance.json \
+        --simulate --synthetic-db
+
+    # measure the real serve kernels into a shareable DB
+    ... --calibrate --db serve_db.json
+
+    # engine + replay twin + priced sim, one parity verdict (CI gate)
+    ... --parity --synthetic-db --report SERVE_parity.json
+
+``--force-host-devices N`` (with ``--shard``) forces N XLA host devices
+and slot-shards the decode batch — it must be handled before JAX imports,
+so all repro imports are deferred into main() (calibrate_net.py idiom).
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import numpy as np
-
-from repro.configs.base import get_config, smoke_variant
-from repro.models import build_model
-from repro.serve import Request, ServeEngine
+import os
+import sys
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def _parse() -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family (CPU-sized)")
+    # engine shape
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="EOS token id for engine early exit (-1: none; "
+                         "parity runs must leave this unset — the twin "
+                         "cannot predict token values)")
+    # workload
+    ap.add_argument("--trace", choices=["poisson", "bursty", "none"],
+                    default="none",
+                    help="generate an open-loop arrival trace (default: "
+                         "all requests arrive at t=0)")
+    ap.add_argument("--trace-file", default="",
+                    help="load the trace from a JSON file (overrides "
+                         "--trace); with --save-trace, write it instead")
+    ap.add_argument("--save-trace", action="store_true",
+                    help="write the generated trace to --trace-file and exit")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="poisson arrival rate (requests/s)")
+    ap.add_argument("--burst-size", type=int, default=4)
+    ap.add_argument("--burst-gap", type=float, default=0.2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    # modes
+    ap.add_argument("--simulate", action="store_true",
+                    help="DES twin only: price the trace, no model runs")
+    ap.add_argument("--parity", action="store_true",
+                    help="run engine AND twin, emit the serve parity report")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure the serve kernels into --db and exit")
+    ap.add_argument("--db", default="",
+                    help="ProfileDB path for serve pricing / calibration")
+    ap.add_argument("--synthetic-db", action="store_true",
+                    help="price from the deterministic synthetic serve grid "
+                         "instead of --db (bit-stable across hosts)")
+    ap.add_argument("--tol-rel", type=float, default=0.5,
+                    help="parity latency tolerance (relative)")
+    ap.add_argument("--report", default="",
+                    help="write the parity/latency report JSON here")
+    # placement
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="--xla_force_host_platform_device_count=N (set "
+                         "before JAX initializes)")
+    ap.add_argument("--shard", action="store_true",
+                    help="slot-shard the decode batch over all devices")
+    return ap.parse_args()
+
+
+def _build_trace(args):
+    from repro.serve.trace import (
+        TraceRequest, bursty_trace, load_trace, poisson_trace, save_trace,
+    )
+
+    if args.trace_file and not args.save_trace:
+        return load_trace(args.trace_file)
+    if args.trace == "poisson":
+        trace = poisson_trace(args.requests, args.rate, seed=args.seed)
+    elif args.trace == "bursty":
+        n_bursts = -(-args.requests // args.burst_size)
+        trace = bursty_trace(
+            n_bursts, args.burst_size, args.burst_gap, seed=args.seed
+        )[: args.requests]
+    else:
+        trace = [
+            TraceRequest(rid=r, arrival_s=0.0, prompt_len=args.prompt_len,
+                         max_new_tokens=args.new_tokens, seed=args.seed)
+            for r in range(args.requests)
+        ]
+    if args.save_trace:
+        if not args.trace_file:
+            raise SystemExit("--save-trace requires --trace-file")
+        save_trace(args.trace_file, trace)
+        print(f"[serve] wrote {len(trace)} requests to {args.trace_file}")
+        return None
+    return trace
+
+
+def _serve_db(args, cfg, scfg):
+    from repro.core.database import ProfileDB
+    from repro.serve.cost import synthetic_serve_calibration
+
+    if args.synthetic_db:
+        db = ProfileDB()
+        synthetic_serve_calibration(
+            db, cfg.name, "cpu_host", views=(scfg.view_len,),
+            slot_grid=(1, 2, scfg.slots, 2 * scfg.slots),
+        )
+        return db
+    if args.db:
+        return ProfileDB.load_or_empty(args.db)
+    return None
+
+
+def _run_engine(args, cfg, scfg, trace):
+    import jax
+
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+    from repro.serve.trace import prompt_tokens
+
+    mesh = None
+    if args.shard:
+        from repro.compat import make_mesh
+
+        ndev = jax.device_count()
+        if args.slots % ndev:
+            raise SystemExit(
+                f"--shard needs slots ({args.slots}) divisible by device "
+                f"count ({ndev})"
+            )
+        mesh = make_mesh((ndev,), ("serve",))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        model, params, slots=args.slots, max_len=args.max_len,
+        eos_id=None if args.eos_id < 0 else args.eos_id,
+        block_size=args.block_size, chunk=args.chunk, mesh=mesh,
+    )
+    # keep jit compile time out of the measured step durations — the
+    # parity gate compares them against offline-profiled predictions
+    engine.warmup()
+    for t in trace:
+        engine.submit(
+            Request(
+                rid=t.rid, prompt=prompt_tokens(t, cfg.vocab_size),
+                max_new_tokens=t.max_new_tokens, arrival_s=t.arrival_s,
+            )
+        )
+    engine.run_until_done()
+    return engine
+
+
+def main() -> int:
+    args = _parse()
+    if args.force_host_devices > 0:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.force_host_devices}"
+        ).strip()
+
+    from repro.configs.base import get_config, smoke_variant
+    from repro.serve.policy import ServeConfig
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, slots=args.slots, max_len=args.max_len)
-
-    rng = np.random.default_rng(0)
-    for r in range(args.requests):
-        engine.submit(
-            Request(
-                rid=r,
-                prompt=rng.integers(
-                    1, cfg.vocab_size, args.prompt_len, dtype=np.int32
-                ),
-                max_new_tokens=args.new_tokens,
-            )
-        )
-    t0 = time.perf_counter()
-    done = engine.run_until_done()
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.output) for r in done)
-    print(
-        f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-        f"({total_tokens / dt:.1f} tok/s, slots={args.slots})"
+    scfg = ServeConfig(
+        slots=args.slots, max_len=args.max_len,
+        block_size=args.block_size, chunk=args.chunk,
     )
-    for r in sorted(done, key=lambda r: r.rid)[:4]:
-        print(f"  req {r.rid}: {r.output}")
+
+    if args.calibrate:
+        import jax
+
+        from repro.core.database import ProfileDB
+        from repro.models import build_model
+        from repro.serve.cost import calibrate_serve
+
+        if not args.db:
+            raise SystemExit("--calibrate requires --db")
+        mesh = None
+        if args.shard:
+            from repro.compat import make_mesh
+
+            ndev = jax.device_count()
+            if args.slots % ndev:
+                raise SystemExit(
+                    f"--shard needs slots ({args.slots}) divisible by "
+                    f"device count ({ndev})"
+                )
+            mesh = make_mesh((ndev,), ("serve",))
+        db = ProfileDB.load_or_empty(args.db)
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        n = calibrate_serve(db, model, params, scfg, mesh=mesh)
+        db.save(args.db)
+        sharded = f" (slot-sharded over {mesh.devices.size} devices)" \
+            if mesh is not None else ""
+        print(f"[serve] calibrated {n} serve entries for {cfg.name} "
+              f"into {args.db}{sharded}")
+        return 0
+
+    trace = _build_trace(args)
+    if trace is None:
+        return 0
+
+    def _show(tag, latency):
+        print(f"[serve] {tag}: {latency['requests']} requests, "
+              f"{latency['total_tokens']} tokens, "
+              f"goodput {latency['goodput_tok_per_s']:.1f} tok/s, "
+              f"ttft p50 {latency['ttft_p50_s'] * 1e3:.2f}ms, "
+              f"per-token p50/p99 {latency['per_token_p50_s'] * 1e3:.3f}/"
+              f"{latency['per_token_p99_s'] * 1e3:.3f}ms")
+
+    sim_res = None
+    if args.simulate or args.parity:
+        from repro.core.estimator import OpTimeEstimator
+        from repro.core.hardware import CPU_HOST
+        from repro.core.profiler import calibrate_host
+        from repro.netprof.pricing import graph_provenance
+        from repro.serve.sim import simulate_serve
+        from repro.analysis import audit_serve_timeline
+
+        db = _serve_db(args, cfg, scfg)
+        if db is None:
+            raise SystemExit("--simulate/--parity need --db or --synthetic-db")
+        platform = (
+            calibrate_host(db) if db.entries("cpu_host", "dot") else CPU_HOST
+        )
+        est = OpTimeEstimator(platform, db=db, use_learned=False)
+        sim_res = simulate_serve(trace, cfg, scfg, est, name=f"serve-{cfg.name}")
+        _show("sim", sim_res.latency)
+        audit = audit_serve_timeline(sim_res.timeline, sim_res.graph)
+        prov = graph_provenance(sim_res.graph)
+        print(f"[serve] sim provenance: {prov}")
+        if not audit.ok:
+            for d in audit.errors:
+                print(f"[serve] AUDIT {d.code}: {d.message}")
+            return 1
+        if args.simulate and not args.parity:
+            if args.report:
+                from repro.serve.report import save_report
+
+                save_report(args.report, {"sim_latency": sim_res.latency,
+                                          "provenance": prov})
+                print(f"[serve] wrote {args.report}")
+            return 0
+
+    from repro.serve.report import (
+        latency_report, records_from_requests, render_parity,
+        save_report, serve_parity_report,
+    )
+
+    engine = _run_engine(args, cfg, scfg, trace)
+    records = records_from_requests(engine.finished)
+    makespan = max(
+        (t for r in engine.finished for t in r.token_times_s), default=0.0
+    )
+    eng_latency = latency_report(records, makespan)
+    _show("engine", eng_latency)
+
+    if not args.parity:
+        if args.report:
+            save_report(args.report, {"engine_latency": eng_latency})
+            print(f"[serve] wrote {args.report}")
+        return 0
+
+    from repro.serve.sim import replay_schedule
+
+    twin = replay_schedule(trace, scfg, engine.step_durations)
+    report = serve_parity_report(
+        engine.step_log, twin.step_log,
+        engine_latency=eng_latency,
+        sim_latency=sim_res.latency if sim_res else None,
+        tol_rel=args.tol_rel,
+    )
+    print(render_parity(report))
+    if args.report:
+        save_report(args.report, report)
+        print(f"[serve] wrote {args.report}")
+    return 0 if report["ok"] else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -22,6 +22,7 @@ PROV_DB = "measured-db"       # exact (payload, group) measurement
 PROV_FIT = "measured-fit"     # fitted CollectiveModel interpolation
 PROV_RING = "ring"            # analytic spec-sheet fallback
 PROV_NOOP = "noop"            # group <= 1: no collective happens
+PROV_ANALYTIC = "analytic"    # roofline on node features (serve fallback)
 
 
 class CollectivePricer:

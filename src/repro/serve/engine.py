@@ -1,16 +1,38 @@
-"""Batched serving engine: slot-based continuous batching.
+"""Continuous-batching serving engine over a paged KV pool.
 
-A fixed decode batch of ``slots`` sequences advances one token per
-``decode`` step (one jitted call for the whole batch); finished or empty
-slots are refilled by prefilling queued requests.  Per-slot KV state lives in
-one batched cache; a slot's region is overwritten at admission via the
-prefill path (slot-sliced dynamic update).
+The engine is a host loop around two jitted kernels
+(``repro.serve.paged``): one prefill *chunk* (batch 1, pow2-bucketed
+width) and one full-batch decode step (static batch = slots).  All
+scheduling decisions — admission, block reservation, chunk selection, the
+decode batch — come from :class:`repro.serve.policy.ServeScheduler`, the
+exact object the DES twin (``repro.serve.sim``) drives, so a simulated
+timeline replays the engine's step compositions verbatim (the house
+parity convention, serve edition).
 
-This is deliberately the same serve_step lowering the decode_32k /
-long_500k dry-run cells compile — the engine is the host-side loop around it.
+Per-request latency is recorded against the *scheduler clock*: each step's
+real (measured) duration is accumulated into ``sched.clock``, and the
+clock fast-forwards over idle gaps while waiting for open-loop arrivals (a
+trace replay never sleeps).  Driving admission off accumulated measured
+time — not raw wall time — means inter-step host overhead never drifts
+the scheduling clock away from the recorded ``step_durations``, so
+``repro.serve.sim.replay_schedule(trace, cfg, engine.step_durations)``
+reproduces the engine's step compositions AND its latency report exactly,
+for any trace (the hard half of the serve parity gate).  TTFT / per-token
+gaps / e2e land on the :class:`Request` and feed
+``repro.serve.report.latency_report``.
+
+The seed engine's lockstep slot loop (single shared ``cache_len``,
+left-padded prefill, the ``slot_len`` clamp at ``max_len - 1`` that
+silently re-wrote the last cache position at the boundary) is gone;
+capacity is now exact — a request may run to *exactly* ``max_len`` cached
+positions (regression-tested in tests/test_serve_engine.py).
+``splice_cache`` survives below: it still splices whole-sequence caches
+for the non-paged ``Model.prefill``/``decode`` path and is property-tested
+on arbitrary pytrees.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -19,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.build import Model
+from repro.serve import paged
+from repro.serve.policy import ServeConfig, ServeScheduler, StepPlan
 
 
 @dataclass
@@ -26,8 +50,13 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,) int32
     max_new_tokens: int = 16
+    arrival_s: float = 0.0       # open-loop arrival offset (trace replay)
     output: list[int] = field(default_factory=list)
     done: bool = False
+    # latency record (virtual-clock seconds, filled by the engine)
+    ttft_s: Optional[float] = None
+    e2e_s: Optional[float] = None
+    token_times_s: list[float] = field(default_factory=list)
 
 
 class ServeEngine:
@@ -38,94 +67,210 @@ class ServeEngine:
         slots: int = 4,
         max_len: int = 256,
         eos_id: Optional[int] = None,
+        block_size: int = 16,
+        chunk: int = 32,
+        num_blocks: int = 0,
+        mesh=None,
+        clock: Callable[[], float] = time.perf_counter,
     ):
+        paged.check_family(model.cfg)
         self.model = model
-        self.params = params
+        self.cfg = model.cfg
+        self.serve_cfg = ServeConfig(
+            slots=slots, max_len=max_len, block_size=block_size,
+            num_blocks=num_blocks, chunk=chunk,
+        )
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
-        cfg = model.cfg
-        self.cache = model.init_cache(slots, max_len, dtype=jnp.float32)
+        self.mesh = mesh
+        self.sched = ServeScheduler(self.serve_cfg)
+        self.requests: dict[int, Request] = {}
         self.slot_req: list[Optional[Request]] = [None] * slots
-        self.slot_len = np.zeros((slots,), np.int32)
-        self.queue: list[Request] = []
         self.finished: list[Request] = []
+        # per-step records for the parity report / latency attribution
+        self.step_log: list[tuple] = []
+        self.step_durations: list[float] = []
 
-        self._decode = jax.jit(model.decode)
-        # prefill jitted per prompt length (padded buckets keep retraces low)
+        mb = self.serve_cfg.max_blocks_per_slot
+        self._tables = np.full(
+            (slots, mb), self.sched.scratch_block, np.int32
+        )
+        self.params = self._replicated(params)
+        self.pool = self._replicated(paged.init_pool(self.cfg, self.serve_cfg))
+
+        scfg = self.serve_cfg
+        self._decode = jax.jit(
+            lambda p, pool, t, ln, tb: paged.decode_batch(
+                p, pool, t, ln, tb, self.cfg, scfg
+            )
+        )
         self._prefill_cache: dict[int, Callable] = {}
+        # duration source only — scheduling time is sched.clock (see module
+        # docstring); injectable for deterministic tests
+        self._clock = clock
 
-    # -- admission -----------------------------------------------------------
+    # -- sharding --------------------------------------------------------------
+
+    def _replicated(self, tree):
+        if self.mesh is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    def _slot_sharded(self, arr):
+        if self.mesh is None:
+            return arr
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        ax = self.mesh.axis_names[0]
+        return jax.device_put(arr, NamedSharding(self.mesh, P(ax)))
+
+    # -- warmup ----------------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile every kernel this engine can dispatch (decode + all pow2
+        prefill buckets) on throwaway inputs, so first-call jit time never
+        lands inside a measured step duration.  Outputs are discarded and
+        the dummy tables point at the scratch block, whose contents are
+        never read (positions past a slot's length are masked), so no
+        engine state changes."""
+        scfg = self.serve_cfg
+        scratch = self.sched.scratch_block
+        row = jnp.full((scfg.max_blocks_per_slot,), scratch, jnp.int32)
+        bucket = 1
+        while bucket <= scfg.chunk:
+            toks = jnp.zeros((1, bucket), jnp.int32)
+            logits, _ = self._prefill_fn(bucket)(
+                self.params, self.pool, toks, jnp.int32(0),
+                jnp.int32(bucket), row,
+            )
+            # the greedy readback compiles its own tiny executable — run it
+            # too, or its first-use cost lands in a measured step
+            int(jnp.argmax(logits[0, -1]))
+            bucket *= 2
+        tables = jnp.full_like(jnp.asarray(self._tables), scratch)
+        logits, _ = self._decode(
+            self.params, self.pool,
+            self._slot_sharded(jnp.zeros((self.slots, 1), jnp.int32)),
+            self._slot_sharded(jnp.zeros((self.slots,), jnp.int32)),
+            self._slot_sharded(tables),
+        )
+        np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+
+    # -- admission -------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _bucket(self, n: int) -> int:
-        b = 16
-        while b < n:
-            b *= 2
-        return min(b, self.max_len)
-
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
-
-            def fn(params, batch):
-                return self.model.prefill(params, batch, self.max_len)
-
-            self._prefill_cache[plen] = jax.jit(fn)
-        return self._prefill_cache[plen]
-
-    def _admit(self) -> None:
-        for s in range(self.slots):
-            if self.slot_req[s] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            plen = self._bucket(len(req.prompt))
-            toks = np.zeros((1, plen), np.int32)
-            toks[0, -len(req.prompt):] = req.prompt  # left-pad
-            logits, cache1 = self._prefill_fn(plen)(
-                self.params, {"tokens": jnp.asarray(toks)}
-            )
-            # splice this one-sequence cache into slot s of the batched cache
-            self.cache = splice_cache(self.cache, cache1, s)
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.output.append(tok)
-            self.slot_req[s] = req
-            self.slot_len[s] = plen
-
-    # -- decode loop -----------------------------------------------------------
-
-    def step(self) -> None:
-        self._admit()
-        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
-        if not active:
-            return
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s in active:
-            toks[s, 0] = self.slot_req[s].output[-1]
-        # single shared cache_len: engine advances all slots in lockstep on
-        # the max; per-slot masks come from left-padding at admission
-        cache_len = int(self.slot_len[active].max()) if len(active) else 0
-        cache_len = min(cache_len, self.max_len - 1)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), cache_len
+        self.sched.submit(
+            req.rid, len(req.prompt), req.max_new_tokens, req.arrival_s
         )
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        for s in active:
-            req = self.slot_req[s]
-            req.output.append(int(nxt[s]))
-            self.slot_len[s] = min(self.slot_len[s] + 1, self.max_len - 1)
-            hit_eos = self.eos_id is not None and int(nxt[s]) == self.eos_id
-            if len(req.output) >= req.max_new_tokens or hit_eos:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[s] = None
-                self.slot_len[s] = 0
+        self.requests[req.rid] = req
 
-    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            scfg = self.serve_cfg
+            scratch = self.sched.scratch_block
+
+            def fn(p, pool, toks, start, width, row):
+                return paged.prefill_chunk(
+                    p, pool, toks, start, width, row, scratch, self.cfg, scfg
+                )
+
+            self._prefill_cache[bucket] = jax.jit(fn)
+        return self._prefill_cache[bucket]
+
+    # -- one engine step -------------------------------------------------------
+
+    def step(self) -> bool:
+        """Execute one scheduler step; False if nothing can progress."""
+        plan = self.sched.plan_step()
+        if plan.empty:
+            nxt = self.sched.next_arrival()
+            if nxt is None:
+                return False
+            # open-loop replay: jump the clock to the next arrival instead
+            # of sleeping through the gap
+            self.sched.skip_to(nxt)
+            plan = self.sched.plan_step()
+            if plan.empty:
+                return False
+        self._execute(plan)
+        return True
+
+    def _execute(self, plan: StepPlan) -> None:
+        t_start = self._clock()
+        scratch = self.sched.scratch_block
+        for rid, slot in plan.admitted:
+            req = self.requests[rid]
+            self.slot_req[slot] = req
+            blocks = self.sched.slot_state(slot).blocks
+            self._tables[slot] = scratch
+            self._tables[slot, : len(blocks)] = blocks
+
+        new_tokens: dict[int, int] = {}
+        if plan.prefill is not None:
+            pf = plan.prefill
+            req = self.slot_req[pf.slot]
+            toks = np.zeros((1, pf.bucket), np.int32)
+            toks[0, : pf.width] = req.prompt[pf.start : pf.start + pf.width]
+            logits, self.pool = self._prefill_fn(pf.bucket)(
+                self.params, self.pool, jnp.asarray(toks),
+                jnp.int32(pf.start), jnp.int32(pf.width),
+                jnp.asarray(self._tables[pf.slot]),
+            )
+            if pf.final:
+                new_tokens[pf.slot] = int(jnp.argmax(logits[0, -1]))
+
+        eos_slots: set[int] = set()
+        if plan.decode_slots:
+            toks = np.zeros((self.slots, 1), np.int32)
+            lengths = np.zeros((self.slots,), np.int32)
+            tables = np.full_like(self._tables, scratch)
+            for s in plan.decode_slots:
+                toks[s, 0] = self.slot_req[s].output[-1]
+                lengths[s] = self.sched.slot_state(s).length
+                tables[s] = self._tables[s]
+            logits, self.pool = self._decode(
+                self.params, self.pool,
+                self._slot_sharded(jnp.asarray(toks)),
+                self._slot_sharded(jnp.asarray(lengths)),
+                self._slot_sharded(jnp.asarray(tables)),
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            for s in plan.decode_slots:
+                tok = int(nxt[s])
+                new_tokens[s] = tok
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos_slots.add(s)
+
+        res = self.sched.commit(plan, frozenset(eos_slots))
+        dur = self._clock() - t_start
+        self.sched.advance(dur)
+        t_end = self.sched.clock
+        self.step_log.append(plan.signature())
+        self.step_durations.append(dur)
+        for slot, tok in new_tokens.items():
+            req = self.slot_req[slot]
+            req.output.append(tok)
+            req.token_times_s.append(t_end)
+            if len(req.output) == 1:
+                req.ttft_s = t_end - req.arrival_s
+        for rid in res.finished:
+            req = self.requests[rid]
+            req.done = True
+            req.e2e_s = t_end - req.arrival_s
+            self.finished.append(req)
+            for s, r in enumerate(self.slot_req):
+                if r is not None and r.rid == rid:
+                    self.slot_req[s] = None
+                    self._tables[s] = scratch
+
+    def run_until_done(self, max_steps: int = 100_000) -> list[Request]:
         steps = 0
-        while (self.queue or any(r is not None for r in self.slot_req)):
-            self.step()
+        while self.sched.outstanding():
+            if not self.step():
+                raise RuntimeError("serving stalled with work outstanding")
             steps += 1
             if steps > max_steps:
                 raise RuntimeError("serving did not converge")
@@ -145,7 +290,7 @@ def _batch_axis(full, one) -> int:
 
 def splice_cache(full, one, slot: int):
     """Functional helper: write sequence-0 of `one` into slot `slot` of
-    `full` (used by the engine; kept separate for unit testing)."""
+    `full` (non-paged whole-cache path; kept separate for unit testing)."""
 
     def leaf(f, o):
         ax = _batch_axis(f, o)

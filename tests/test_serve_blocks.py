@@ -1,0 +1,135 @@
+"""Property tests: KV block allocator, block tables, cache splicing.
+
+Runs under real hypothesis or ``repro.testing.hypothesis_fallback``
+(installed by conftest.py when hypothesis is absent).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.blocks import (
+    BlockAllocator,
+    BlockTable,
+    OutOfBlocksError,
+    blocks_for_tokens,
+)
+from repro.serve.engine import splice_cache
+
+NUM_BLOCKS = 24
+
+
+def test_blocks_for_tokens_ceil():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(-3, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2
+    assert blocks_for_tokens(64, 16) == 4
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 7), st.integers(1, 6), st.booleans()),
+        min_size=1, max_size=40,
+    )
+)
+def test_allocator_never_shares_and_returns_blocks(ops):
+    """Invariants under arbitrary alloc/free interleavings: a block never
+    belongs to two live owners, free accounting is exact, and freeing an
+    owner returns every one of its blocks to the pool."""
+    a = BlockAllocator(NUM_BLOCKS, block_size=8)
+    owned: dict[str, set[int]] = {}
+    for owner_i, n, do_free in ops:
+        owner = f"r{owner_i}"
+        if do_free and owner in owned:
+            a.free_owner(owner)
+            owned.pop(owner)
+        elif a.can_alloc(n):
+            blocks = a.alloc(n, owner)
+            assert len(blocks) == len(set(blocks)) == n
+            in_use = set().union(*owned.values()) if owned else set()
+            assert not set(blocks) & in_use, "block handed to two owners"
+            owned.setdefault(owner, set()).update(blocks)
+        else:
+            with pytest.raises(OutOfBlocksError):
+                a.alloc(n, owner)
+        assert a.num_free == NUM_BLOCKS - sum(len(s) for s in owned.values())
+        for o, s in owned.items():
+            assert set(a.blocks_of(o)) == s
+    for owner in list(owned):
+        a.free_owner(owner)
+    assert a.num_free == NUM_BLOCKS
+
+
+def test_allocator_rejects_foreign_free():
+    a = BlockAllocator(4, block_size=8)
+    (b,) = a.alloc(1, "r0")
+    with pytest.raises(ValueError):
+        a.free([b + 1])
+    a.free([b])
+    assert a.num_free == 4
+
+
+def test_allocator_deterministic_lowest_first():
+    a = BlockAllocator(8, block_size=8)
+    assert a.alloc(3, "r0") == [0, 1, 2]
+    a.free_owner("r0")
+    b = BlockAllocator(8, block_size=8)
+    assert b.alloc(3, "x") == [0, 1, 2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 6))
+def test_block_table_locate(block_size, nblocks):
+    blocks = [10 + 3 * i for i in range(nblocks)]
+    t = BlockTable(blocks, block_size)
+    assert t.capacity == nblocks * block_size
+    for pos in range(t.capacity):
+        bid, off = t.locate(pos)
+        assert bid == blocks[pos // block_size]
+        assert off == pos % block_size
+    with pytest.raises(IndexError):
+        t.locate(t.capacity)
+    with pytest.raises(IndexError):
+        t.locate(-1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 4), st.integers(0, 10_000))
+def test_splice_cache_pytree_roundtrip(slots, slot, seed):
+    """splice_cache writes sequence-0 of the single-slot tree into exactly
+    slot ``slot`` of the full tree, for arbitrary pytrees whose leaves put
+    the batch axis at different positions."""
+    slot = slot % slots
+    rng = np.random.default_rng(seed)
+    full = {
+        "k": rng.standard_normal((slots, 4, 3)).astype(np.float32),
+        "nested": [
+            rng.standard_normal((3, slots, 2)).astype(np.float32),
+            rng.standard_normal((slots,)).astype(np.float32),
+        ],
+    }
+    one = {
+        "k": rng.standard_normal((1, 4, 3)).astype(np.float32),
+        "nested": [
+            rng.standard_normal((3, 1, 2)).astype(np.float32),
+            rng.standard_normal((1,)).astype(np.float32),
+        ],
+    }
+    out = jax.tree_util.tree_map(np.asarray, splice_cache(full, one, slot))
+
+    def check(f, o, g, axis):
+        sel = [slice(None)] * f.ndim
+        sel[axis] = slot
+        np.testing.assert_array_equal(g[tuple(sel)], np.take(o, 0, axis))
+        untouched = [s for s in range(slots) if s != slot]
+        sel[axis] = untouched
+        exp = [slice(None)] * f.ndim
+        exp[axis] = untouched
+        np.testing.assert_array_equal(g[tuple(sel)], f[tuple(exp)])
+
+    check(full["k"], one["k"], out["k"], axis=0)
+    check(full["nested"][0], one["nested"][0], out["nested"][0], axis=1)
+    check(full["nested"][1], one["nested"][1], out["nested"][1], axis=0)

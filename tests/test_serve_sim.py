@@ -1,0 +1,335 @@
+"""DES serving twin: determinism, engine parity, pricing provenance.
+
+Three layers of guarantees, in rising strength:
+
+* the priced simulation is *deterministic* — same trace + same synthetic
+  DB give a bit-identical latency report, in-process and across Python
+  processes with different hash seeds (the check.sh determinism gate);
+* the scheduler twin replaying the engine's measured step durations
+  reproduces the engine's step compositions AND its latency records
+  *exactly* (shared-policy parity, the hard gate);
+* every priced serve node carries ``time_provenance`` (A004 audit) and
+  the provenance chain is DB -> fit -> analytic with no ring fallback.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_variant
+from repro.core.database import ProfileDB
+from repro.core.estimator import OpTimeEstimator
+from repro.core.hardware import CPU_HOST
+from repro.serve.cost import synthetic_serve_calibration
+from repro.serve.policy import ServeConfig
+from repro.serve.report import (
+    latency_report,
+    percentile,
+    records_from_requests,
+    serve_parity_report,
+)
+from repro.serve.sim import replay_schedule, simulate_serve
+from repro.serve.trace import (
+    TraceRequest,
+    bursty_trace,
+    load_trace,
+    poisson_trace,
+    prompt_tokens,
+    save_trace,
+)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+_SMOKE = smoke_variant(get_config("llama3.2-1b"))
+
+
+def _synthetic_setup(scfg, *, slot_grid=(1, 2, 4), arch=None):
+    db = ProfileDB()
+    synthetic_serve_calibration(
+        db, arch or _SMOKE.name, "cpu_host",
+        views=(scfg.view_len,), slot_grid=slot_grid,
+    )
+    return OpTimeEstimator(CPU_HOST, db=db, use_learned=False), db
+
+
+# -- report primitives ---------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 50) == 0.0
+    assert percentile([5.0], 99) == 5.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 50) == 2.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 100) == 4.0
+    vals = [float(i) for i in range(1, 101)]
+    assert percentile(vals, 99) == 99.0
+    assert percentile(vals, 1) == 1.0
+
+
+def test_parity_report_detects_divergence():
+    a = [(0, (), None, (0,)), (1, (), None, (0,))]
+    ok = serve_parity_report(a, list(a))
+    assert ok["composition_ok"] and ok["ok"]
+
+    diverged = serve_parity_report(a, [a[0], (1, (), None, (0, 1))])
+    assert not diverged["composition_ok"] and not diverged["ok"]
+    assert diverged["composition_mismatches"][0]["step"] == 1
+
+    short = serve_parity_report(a, a[:1])
+    assert not short["composition_ok"]
+
+    lat = {"per_token_p50_s": 1.0, "per_token_p99_s": 1.0, "ttft_p50_s": 1.0}
+    sim = dict(lat, per_token_p99_s=2.0)  # 100% error
+    bad = serve_parity_report(a, list(a), engine_latency=lat,
+                              sim_latency=sim, tol_rel=0.5)
+    assert bad["composition_ok"] and not bad["latency_ok"] and not bad["ok"]
+
+
+# -- trace generators ----------------------------------------------------------
+
+
+def test_trace_generators_deterministic_and_roundtrip(tmp_path):
+    t1 = poisson_trace(10, 50.0, seed=7)
+    t2 = poisson_trace(10, 50.0, seed=7)
+    assert t1 == t2
+    assert t1 != poisson_trace(10, 50.0, seed=8)
+    arrivals = [r.arrival_s for r in t1]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0.0
+
+    b = bursty_trace(3, 4, 0.25, seed=1)
+    assert [r.arrival_s for r in b] == [0.25 * (i // 4) for i in range(12)]
+
+    path = str(tmp_path / "trace.json")
+    save_trace(path, t1)
+    assert load_trace(path) == t1
+
+    toks = prompt_tokens(t1[3], _SMOKE.vocab_size)
+    np.testing.assert_array_equal(toks, prompt_tokens(t1[3], _SMOKE.vocab_size))
+    assert len(toks) == t1[3].prompt_len
+    assert toks.min() >= 1 and toks.max() < _SMOKE.vocab_size
+
+
+# -- priced-sim determinism ----------------------------------------------------
+
+
+def test_sim_deterministic_replay(tmp_path):
+    """Same trace + same DB -> bit-identical latency report and step log,
+    including through a save/load round trip of both trace and DB."""
+    scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+    est, db = _synthetic_setup(scfg)
+    trace = poisson_trace(6, 40.0, seed=3)
+
+    r1 = simulate_serve(trace, _SMOKE, scfg, est)
+    r2 = simulate_serve(trace, _SMOKE, scfg, est)
+    assert r1.latency == r2.latency
+    assert r1.step_log == r2.step_log
+    assert r1.step_durations == r2.step_durations
+
+    tpath, dpath = str(tmp_path / "t.json"), str(tmp_path / "db.json")
+    save_trace(tpath, trace)
+    db.save(dpath)
+    est3 = OpTimeEstimator(CPU_HOST, db=ProfileDB.load_or_empty(dpath),
+                           use_learned=False)
+    r3 = simulate_serve(load_trace(tpath), _SMOKE, scfg, est3)
+    assert r3.latency == r1.latency
+    assert r3.step_log == r1.step_log
+
+    # the JSON the CI gate compares round-trips exactly too
+    assert json.loads(json.dumps(r1.latency)) == r1.latency
+
+
+_DETERMINISM_SCRIPT = """
+import json
+from repro.configs.base import get_config, smoke_variant
+from repro.core.database import ProfileDB
+from repro.core.estimator import OpTimeEstimator
+from repro.core.hardware import CPU_HOST
+from repro.serve.cost import synthetic_serve_calibration
+from repro.serve.policy import ServeConfig
+from repro.serve.sim import simulate_serve
+from repro.serve.trace import poisson_trace
+
+cfg = smoke_variant(get_config("llama3.2-1b"))
+scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+db = ProfileDB()
+synthetic_serve_calibration(db, cfg.name, "cpu_host",
+                            views=(scfg.view_len,), slot_grid=(1, 2, 4))
+est = OpTimeEstimator(CPU_HOST, db=db, use_learned=False)
+res = simulate_serve(poisson_trace(6, 40.0, seed=3), cfg, scfg, est)
+print(json.dumps(res.latency, sort_keys=True))
+print(json.dumps(res.step_log))
+"""
+
+
+def test_sim_deterministic_across_processes():
+    """The priced serve report is bit-identical across Python processes
+    with different hash seeds (scripts/check.sh determinism target)."""
+    outs = []
+    for hash_seed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hash_seed
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run(
+            [sys.executable, "-c", _DETERMINISM_SCRIPT], env=env,
+            capture_output=True, text=True, timeout=600,
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        outs.append(out.stdout)
+    assert outs[0] == outs[1]
+
+
+# -- scheduler behaviour through the twin --------------------------------------
+
+
+def test_sim_caps_output_to_kv_capacity():
+    """A huge token budget is capped to max_len - prompt_len + 1 cache
+    positions (the boundary the engine's off-by-one fix pins)."""
+    scfg = ServeConfig(slots=1, max_len=32, block_size=8, chunk=8)
+    est, _ = _synthetic_setup(scfg, slot_grid=(1, 2))
+    trace = [TraceRequest(rid=0, arrival_s=0.0, prompt_len=10,
+                          max_new_tokens=500)]
+    res = simulate_serve(trace, _SMOKE, scfg, est)
+    assert res.records[0]["n_tokens"] == 32 - 10 + 1
+    assert res.records[0]["e2e_s"] is not None
+
+
+def test_sim_head_of_line_blocking_is_fifo():
+    """A small request queued behind one that does not fit the block pool
+    must NOT overtake it (reordering would break composition parity)."""
+    # 4 blocks/slot; pool 7 = scratch + r0's 4 + 2 spare: r1 (needs 4)
+    # blocks the queue head even though r2 (needs 1) would fit.
+    scfg = ServeConfig(slots=2, max_len=32, block_size=8, chunk=8,
+                       num_blocks=7)
+    est, _ = _synthetic_setup(scfg, slot_grid=(1, 2))
+    trace = [
+        TraceRequest(rid=0, arrival_s=0.0, prompt_len=8, max_new_tokens=25),
+        TraceRequest(rid=1, arrival_s=0.0, prompt_len=8, max_new_tokens=25),
+        TraceRequest(rid=2, arrival_s=0.0, prompt_len=4, max_new_tokens=1),
+    ]
+    res = simulate_serve(trace, _SMOKE, scfg, est)
+    first_tok = {r["rid"]: r["arrival_s"] + r["ttft_s"] for r in res.records}
+    assert first_tok[0] < first_tok[1] <= first_tok[2]
+    assert all(r["e2e_s"] is not None for r in res.records)
+
+
+# -- engine <-> twin parity ----------------------------------------------------
+
+
+class _Ticker:
+    """Deterministic engine clock: 1ms per reading."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1e-3
+        return self.t
+
+
+def test_engine_twin_composition_and_latency_parity(rng):
+    """replay_schedule over the engine's measured durations reproduces the
+    engine's step compositions AND latency records exactly — including
+    timed arrivals that land mid-run (admission clock parity)."""
+    import dataclasses
+
+    import jax
+
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = dataclasses.replace(_SMOKE, num_layers=2)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    # ~1ms per step (deterministic fake clock) with arrivals interleaved
+    # at 0 / 3.5ms / 7.2ms: request 1 and 2 arrive while 0 is in flight.
+    trace = [
+        TraceRequest(rid=0, arrival_s=0.0, prompt_len=9, max_new_tokens=6),
+        TraceRequest(rid=1, arrival_s=3.5e-3, prompt_len=12,
+                     max_new_tokens=4),
+        TraceRequest(rid=2, arrival_s=7.2e-3, prompt_len=5, max_new_tokens=5),
+    ]
+    eng = ServeEngine(model, params, slots=2, max_len=32, block_size=8,
+                      chunk=8, clock=_Ticker())
+    for t in trace:
+        eng.submit(Request(rid=t.rid, prompt=prompt_tokens(t, cfg.vocab_size),
+                           max_new_tokens=t.max_new_tokens,
+                           arrival_s=t.arrival_s))
+    eng.run_until_done()
+
+    twin = replay_schedule(trace, eng.serve_cfg, eng.step_durations)
+    assert twin.step_log == eng.step_log
+    assert twin.step_durations == eng.step_durations
+
+    eng_records = records_from_requests(eng.finished)
+    assert eng_records == twin.records
+    makespan = max(t for r in eng.finished for t in r.token_times_s)
+    assert latency_report(eng_records, makespan) == twin.latency
+
+    report = serve_parity_report(eng.step_log, twin.step_log,
+                                 engine_latency=latency_report(eng_records,
+                                                               makespan),
+                                 sim_latency=twin.latency, tol_rel=0.0)
+    assert report["ok"], report
+
+
+def test_replay_rejects_short_duration_list():
+    trace = [TraceRequest(rid=0, arrival_s=0.0, prompt_len=4,
+                          max_new_tokens=4)]
+    scfg = ServeConfig(slots=1, max_len=16, block_size=8, chunk=8)
+    with pytest.raises(RuntimeError, match="step counts diverge"):
+        replay_schedule(trace, scfg, [1e-3])
+
+
+# -- provenance + audit --------------------------------------------------------
+
+
+def test_sim_pricing_provenance_chain():
+    """DB hit -> interpolated fit -> analytic roofline; never ring."""
+    from repro.netprof.pricing import graph_provenance
+
+    scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+    trace = poisson_trace(4, 40.0, seed=0)
+
+    def provs(est):
+        g = simulate_serve(trace, _SMOKE, scfg, est).graph
+        # graph_provenance: {kind: {provenance: count}}
+        by_kind = graph_provenance(g)
+        assert set(by_kind) == {"serve_prefill", "serve_decode"}
+        return {p for k in by_kind.values() for p in k}
+
+    # decode batch (slots=2) and all pow2 prefill buckets on the grid
+    est, _ = _synthetic_setup(scfg, slot_grid=(1, 2, 4))
+    assert provs(est) == {"measured-db"}
+
+    # decode x=2 off the grid -> log-log interpolated
+    est, _ = _synthetic_setup(scfg, slot_grid=(1, 4))
+    got = provs(est)
+    assert "measured-fit" in got and "ring" not in got
+
+    # arch absent from the DB entirely -> analytic roofline, not ring
+    est, _ = _synthetic_setup(scfg, arch="some-other-arch")
+    assert provs(est) == {"analytic"}
+
+
+def test_audit_serve_timeline_a004():
+    """Every priced serve node must carry time_provenance; a stripped node
+    is an A004 error."""
+    from repro.analysis import audit_serve_timeline
+
+    scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+    est, _ = _synthetic_setup(scfg)
+    res = simulate_serve(poisson_trace(4, 40.0, seed=0), _SMOKE, scfg, est)
+
+    rep = audit_serve_timeline(res.timeline, res.graph)
+    assert rep.ok, [f.message for f in rep.errors]
+    assert rep.metrics["serve_nodes"] == len(res.graph.nodes)
+    assert rep.metrics["serve_nodes"] > 0
+
+    victim = next(n for n in res.graph.nodes if "serve" in n.meta)
+    victim.meta.pop("time_provenance")
+    rep2 = audit_serve_timeline(res.timeline, res.graph)
+    assert not rep2.ok
+    assert any(f.code == "A004" for f in rep2.errors)
