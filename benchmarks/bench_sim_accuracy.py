@@ -155,6 +155,55 @@ def serve_rows() -> list[dict]:
     ]
 
 
+def coverage_rows() -> list[dict]:
+    """Coverage-auditor determinism pins: classify the acceptance trace's
+    pricing queries against a full synthetic serve grid (every query an
+    exact DB hit) and a gapped one (decode slots off-grid, so the same
+    trace classifies as interpolation).  Classification is pure arithmetic
+    over (trace, grid) — no timing — so the counts and per-family ratios
+    pin bit-exact; drift means the query enumeration or the pricer's
+    lookup/interpolation logic changed behaviour."""
+    from repro.analysis.coverage import audit_serve_coverage
+    from repro.configs.base import get_config, smoke_variant
+    from repro.core.database import ProfileDB
+    from repro.serve.cost import synthetic_serve_calibration
+    from repro.serve.policy import ServeConfig
+    from repro.serve.trace import load_trace
+
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+    trace = load_trace(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "traces", "serve_acceptance.json")
+    )
+    rows = []
+    for tag, slot_grid in (("full", (1, 2, 4)), ("gapped", (1, 4))):
+        db = ProfileDB()
+        synthetic_serve_calibration(
+            db, cfg.name, "cpu_host", views=(scfg.view_len,),
+            slot_grid=slot_grid,
+        )
+        cov = audit_serve_coverage(trace, cfg.name, scfg, db)
+        m = cov.report.metrics
+        derived = (
+            f"grid_rows={len(cov.grid)};"
+            f"slot_grid={'/'.join(str(s) for s in slot_grid)}"
+        )
+        for metric in (
+            "coverage_queries",
+            "coverage_exact",
+            "coverage_interpolation",
+            "coverage_serve_prefill_exact_ratio",
+            "coverage_serve_decode_exact_ratio",
+        ):
+            rows.append(
+                {"name": f"serve_cov_{tag}_{metric[len('coverage_'):]}",
+                 "value": float(m[metric]),
+                 "tol_rel": 0.0, "tol_abs": 0.0, "derived": derived}
+            )
+    return rows
+
+
 def run(steps: int = 12, profile_repeats: int = 5) -> list[dict]:
     import jax
 
@@ -257,5 +306,5 @@ if __name__ == "__main__":
     rows = schedule_rows() if args.smoke else run()
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
-    for r in serve_rows():
+    for r in serve_rows() + coverage_rows():
         print(f"{r['name']},{r['value']:.2f},{r['derived']}")

@@ -59,8 +59,9 @@ def collect(smoke: bool) -> dict[str, dict]:
             "tol_abs": float(r.get("tol_abs", 0.0)),
         }
     # serve rows: the DES serving twin pricing the committed acceptance
-    # trace from the synthetic grid (bit-deterministic, zero tolerance)
-    for r in bench_sim_accuracy.serve_rows():
+    # trace from the synthetic grid (bit-deterministic, zero tolerance),
+    # plus the coverage auditor's classification counts for the same trace
+    for r in bench_sim_accuracy.serve_rows() + bench_sim_accuracy.coverage_rows():
         metrics[r["name"]] = {
             "value": float(r["value"]),
             "tol_rel": float(r.get("tol_rel", 0.0)),

@@ -21,11 +21,14 @@
 #                        then verify a pp+int8+MoE simulation prices every
 #                        collective from the measured chain (0 ring fallbacks)
 #   check.sh lint        ruff (config in pyproject.toml)
-#   check.sh types       mypy over src/repro/{core,dist,analysis}
+#   check.sh types       mypy over src/repro/{core,dist,analysis,serve,netprof}
 #                        (permissive-strict config in pyproject.toml)
 #   check.sh analyze     static plan verifier (repro.analysis) over every
-#                        registered config; fails on any error-level
-#                        finding, writes ANALYZE_report.json
+#                        registered config, plus the serve-plan ledger +
+#                        ProfileDB coverage audit over the committed
+#                        acceptance trace; fails on any error-level
+#                        finding, writes ANALYZE_report.json and
+#                        ANALYZE_serve.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -103,13 +106,18 @@ if [[ "${1:-}" == "types" ]]; then
              "(pip install -e '.[lint]')"
         exit 0
     fi
-    exec mypy src/repro/core src/repro/dist src/repro/analysis
+    exec mypy src/repro/core src/repro/dist src/repro/analysis \
+        src/repro/serve src/repro/netprof
 fi
 
 if [[ "${1:-}" == "analyze" ]]; then
     # the static plan verifier must run clean (zero errors) over every
-    # registered config; exit status carries the verdict
-    exec python -m repro.analysis --json ANALYZE_report.json "${@:2}"
+    # registered config — training plans AND the serve acceptance trace
+    # (KV-ledger replay + per-arch coverage audit); exit status carries
+    # the verdict
+    exec python -m repro.analysis --json ANALYZE_report.json \
+        --serve-trace benchmarks/traces/serve_acceptance.json \
+        --serve-json ANALYZE_serve.json "${@:2}"
 fi
 
 # fail fast on import-error walls before running anything

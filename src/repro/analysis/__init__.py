@@ -11,7 +11,13 @@ representations, three lint families, one diagnostics engine:
   detection with the stuck wait chain named, ppermute send/recv pairing
   over the compiled executor plan (S* codes);
 * :mod:`repro.analysis.timeline_checks` — DES serialization/causality
-  invariants and the link-overlap divergence audit (T* codes).
+  invariants and the link-overlap divergence audit (T* codes);
+* :mod:`repro.analysis.serve_checks` — symbolic replay of the serve
+  scheduler's KV-block ledger over a request trace (R* codes);
+* :mod:`repro.analysis.coverage` — ProfileDB coverage audit: classifies
+  every pricing query a plan will issue as exact / interpolation /
+  extrapolation / fallback before anything runs, and emits the minimal
+  calibration grid that would close the gaps (A005+ codes).
 
 Load-bearing consumers: ``launch/train.py --analyze`` (raises
 :class:`PlanVerificationError` before executing a bad plan),
@@ -22,7 +28,19 @@ config), and ``python -m repro.analysis``.  See docs/analysis.md.
 from repro.analysis.analyzer import (  # noqa: F401
     analyze_all_configs,
     analyze_graph,
+    analyze_serve_sweep,
+    analyze_serve_trace,
     analyze_training_plan,
+)
+from repro.analysis.coverage import (  # noqa: F401
+    CoverageResult,
+    PricingQuery,
+    audit_collective_coverage,
+    audit_serve_coverage,
+    classify_collective_query,
+    classify_serve_query,
+    enumerate_collective_queries,
+    enumerate_serve_queries,
 )
 from repro.analysis.diagnostics import (  # noqa: F401
     DIAGNOSTIC_CODES,
@@ -42,7 +60,15 @@ from repro.analysis.schedule_checks import (  # noqa: F401
     lint_schedule,
     lint_strategy,
 )
+from repro.analysis.serve_checks import (  # noqa: F401
+    ServePlan,
+    audit_serve_plan,
+    check_serve_plan,
+    extract_serve_plan,
+    lint_serve_trace,
+)
 from repro.analysis.timeline_checks import (  # noqa: F401
     audit_serve_timeline,
     audit_timeline,
+    link_contention,
 )

@@ -2,10 +2,14 @@
 
     PYTHONPATH=src python -m repro.analysis [--json report.json] \
         [--pp 4] [--microbatches 8] [--seq 512] [--netprof-db db.json] \
-        [--no-sim]
+        [--no-sim] [--serve-trace trace.json] [--serve-json serve.json]
 
 Exit status 0 when every analyzed plan is free of error-level findings,
-1 otherwise — the ``scripts/check.sh analyze`` CI gate.
+1 otherwise — the ``scripts/check.sh analyze`` CI gate.  With
+``--serve-trace`` the sweep also replays the trace's KV-block ledger
+(R codes) and audits ProfileDB coverage for every arch's serve grid
+(A005+); ``--serve-json`` writes that half — findings plus the per-arch
+coverage documents — as its own artifact.
 """
 from __future__ import annotations
 
@@ -32,6 +36,13 @@ def main(argv=None) -> int:
     ap.add_argument("--netprof-db", default=None,
                     help="calibrated ProfileDB: audit collective pricing "
                          "provenance (A003 on silent ring fallback)")
+    ap.add_argument("--serve-trace", default=None,
+                    help="serve request trace (JSON): replay the KV-block "
+                         "ledger (R codes) and audit serve ProfileDB "
+                         "coverage (A005+) for every arch")
+    ap.add_argument("--serve-json", default=None,
+                    help="write the serve-sweep report (findings + "
+                         "coverage documents) here")
     args = ap.parse_args(argv)
 
     estimator = None
@@ -39,6 +50,15 @@ def main(argv=None) -> int:
         from repro.launch.train import netprof_estimator
 
         estimator, _ = netprof_estimator(args.netprof_db)
+
+    serve_report = None
+    if args.serve_trace:
+        from repro.analysis.analyzer import analyze_serve_sweep
+        from repro.serve.trace import load_trace
+
+        serve_report = analyze_serve_sweep(
+            load_trace(args.serve_trace), log_fn=print
+        )
 
     report = analyze_all_configs(
         pp=args.pp,
@@ -49,6 +69,11 @@ def main(argv=None) -> int:
         run_sim=not args.no_sim,
         log_fn=print,
     )
+    if serve_report is not None:
+        if args.serve_json:
+            serve_report.to_json(args.serve_json)
+            print(f"[analyze] serve report written to {args.serve_json}")
+        report.extend(serve_report)
     for line in report.summary_lines():
         print(line)
     if args.json:

@@ -122,6 +122,20 @@ def analyze_training_plan(
     if not report.ok:
         return report
 
+    pricer = getattr(estimator, "collective_pricer", None)
+    if pricer is not None:
+        from repro.analysis.coverage import audit_collective_coverage
+
+        cov = audit_collective_coverage(
+            graph, pricer,
+            comm_bytes_fn=getattr(estimator, "comm_bytes_fn", None),
+            name=report.name,
+        )
+        report.extend(cov.report)
+        report.extras.setdefault("coverage", {})[report.name] = cov.to_dict()
+        if not report.ok:
+            return report
+
     if run_sim:
         from repro.core.estimator import OpTimeEstimator
         from repro.core.hardware import TPU_V5E
@@ -146,6 +160,8 @@ def analyze_all_configs(
     estimator=None,
     run_sim: bool = True,
     log_fn=None,
+    serve_trace=None,
+    serve_cfg=None,
 ) -> Report:
     """The CI sweep: every registered arch config through every schedule
     family its layer count can realize.  When a config cannot realize the
@@ -196,4 +212,86 @@ def analyze_all_configs(
             f"[analyze] skipped (no stage count realizes the shape): "
             f"{', '.join(skipped)}"
         )
+    if serve_trace is not None:
+        merged.extend(
+            analyze_serve_sweep(serve_trace, serve_cfg, log_fn=log_fn)
+        )
+    return merged
+
+
+# -- serve plans ----------------------------------------------------------------
+
+# the sweep's serving shape: mirrors benchmarks/bench_sim_accuracy.serve_rows
+# (slots small enough that the acceptance trace exercises head-of-line
+# blocking, chunk 8 so prompts split into multiple pow2 buckets)
+SWEEP_SERVE_CFG = dict(slots=2, max_len=64, block_size=8, chunk=8)
+
+
+def analyze_serve_trace(
+    trace,
+    arch: str,
+    scfg,
+    *,
+    db=None,
+    platform: str = "cpu_host",
+    db_path: str = "<db.json>",
+    name: Optional[str] = None,
+) -> Report:
+    """Statically verify one serve plan: resource ledger + DB coverage.
+
+    Runs the R-code sanitizer (``repro.analysis.serve_checks``) over the
+    trace's scheduler replay, then — when a ProfileDB is supplied — the
+    A005+ coverage audit (``repro.analysis.coverage``) over the exact
+    query set the priced simulation would issue.  The coverage document
+    lands in ``report.extras["coverage"][arch]``.
+    """
+    from repro.analysis.serve_checks import audit_serve_plan
+
+    report = audit_serve_plan(trace, scfg, name=name or f"serve:{arch}")
+    if db is not None and report.ok:
+        from repro.analysis.coverage import audit_serve_coverage
+
+        cov = audit_serve_coverage(
+            trace, arch, scfg, db, platform,
+            db_path=db_path, name=report.name,
+        )
+        report.extend(cov.report)
+        report.extras.setdefault("coverage", {})[arch] = cov.to_dict()
+    return report
+
+
+def analyze_serve_sweep(
+    trace,
+    serve_cfg=None,
+    *,
+    archs=None,
+    log_fn=None,
+) -> Report:
+    """Serve half of the CI sweep: one ledger check for the trace, plus a
+    per-arch coverage audit against that arch's synthetic serve grid (the
+    same deterministic grid the serve determinism/bench gates price from,
+    so a fully-covered trace classifies 100% exact)."""
+    from repro.configs.base import list_archs
+    from repro.core.database import ProfileDB
+    from repro.serve.cost import synthetic_serve_calibration
+    from repro.serve.policy import ServeConfig
+
+    scfg = serve_cfg or ServeConfig(**SWEEP_SERVE_CFG)
+    reports = []
+    for arch in archs or list_archs():
+        db = ProfileDB()
+        synthetic_serve_calibration(
+            db, arch, "cpu_host", views=(scfg.view_len,),
+            slot_grid=(1, 2, scfg.slots, 2 * scfg.slots),
+        )
+        r = analyze_serve_trace(trace, arch, scfg, db=db)
+        if log_fn is not None:
+            c = r.counts()
+            log_fn(
+                f"[analyze] {r.name}: {c['error']} errors, "
+                f"{c['warning']} warnings"
+            )
+        reports.append(r)
+    merged = merge_reports("serve-sweep", reports)
+    merged.metrics["serve_plans_analyzed"] = float(len(reports))
     return merged

@@ -10,7 +10,8 @@ JSON document consumed by ``scripts/check.sh analyze`` and the launcher.
 Codes are STABLE: tools (CI gates, the autotuner's pruner, tests) key on
 them, so a code is never renumbered or reused — see docs/analysis.md for
 the full table.  Prefixes: ``G`` graph lints, ``A`` accounting
-completeness, ``S`` schedule static checks, ``T`` timeline (DES) audit.
+completeness (including ProfileDB coverage, A005+), ``S`` schedule static
+checks, ``T`` timeline (DES) audit, ``R`` serve-plan resource ledger.
 """
 from __future__ import annotations
 
@@ -42,6 +43,13 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "A002": "collective resolves to zero payload bytes with group_size > 1",
     "A003": "collective silently ring-priced despite a supplied netprof DB",
     "A004": "priced serve node missing time_provenance",
+    # -- ProfileDB coverage audit (repro.analysis.coverage) -----------------
+    "A005": "pricing query will fall back to analytic/ring despite a "
+            "supplied ProfileDB (family/arch has no measurements)",
+    "A006": "pricing query extrapolates beyond the measured grid",
+    "A007": "pricing query interpolates between measured grid points",
+    "A008": "per-family exact-hit coverage ratio below threshold",
+    "A009": "calibration grid emitted: measuring it would close the gaps",
     # -- schedule static checks (repro.analysis.schedule_checks) -----------
     "S001": "step scheduled on the wrong device for its virtual stage",
     "S002": "duplicate step in the table",
@@ -62,6 +70,21 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "T003": "event with negative, NaN, or infinite duration",
     "T004": "event extends beyond the reported makespan",
     "T010": "link streams concurrently busy (serialization-divergence audit)",
+    # -- serve-plan resource ledger (repro.analysis.serve_checks) -----------
+    "R001": "KV block leak: a block allocated to a request is never freed",
+    "R002": "KV block double-free, or free of a block the request never "
+            "owned",
+    "R003": "block reservation violates the pool: worst-case live "
+            "reservations exceed the usable pool, a block is double-booked, "
+            "or an id is outside the pool range",
+    "R004": "effective_max_tokens capacity cap violated: admitted budget or "
+            "prompt exceeds what the KV cache can hold",
+    "R005": "FIFO admission order broken: a request jumped an earlier "
+            "arrival (or was admitted before it arrived)",
+    "R006": "decode-slot exclusivity broken: a slot decoded twice, decoded "
+            "while prefilling, or was used without an admitted request",
+    "R007": "per-request token-count bounds broken: tokens emitted outside "
+            "[1, effective_max_tokens] (EOS may finish early, never late)",
 }
 
 
@@ -105,6 +128,9 @@ class Report:
         self.name = name
         self.findings: list[Diagnostic] = []
         self.metrics: dict[str, float] = {}
+        # structured side-documents (e.g. the coverage report), serialized
+        # under "extras" only when present so legacy reports are unchanged
+        self.extras: dict[str, Any] = {}
 
     # -- construction --------------------------------------------------------
 
@@ -129,9 +155,17 @@ class Report:
         return self.add(code, INFO, message, **where)
 
     def extend(self, other: "Report") -> "Report":
-        """Merge another report's findings and metrics into this one."""
+        """Merge another report's findings, metrics, and extras into this
+        one (dict-valued extras merge key-wise: per-arch coverage documents
+        from a sweep must not clobber each other)."""
         self.findings.extend(other.findings)
         self.metrics.update(other.metrics)
+        for key, val in other.extras.items():
+            mine = self.extras.get(key)
+            if isinstance(mine, dict) and isinstance(val, dict):
+                mine.update(val)
+            else:
+                self.extras[key] = val
         return self
 
     # -- queries --------------------------------------------------------------
@@ -190,13 +224,16 @@ class Report:
         return lines
 
     def to_dict(self) -> dict[str, Any]:
-        return {
+        doc = {
             "name": self.name,
             "ok": self.ok,
             "counts": self.counts(),
             "findings": [d.to_dict() for d in self.findings],
             "metrics": dict(self.metrics),
         }
+        if self.extras:
+            doc["extras"] = dict(self.extras)
+        return doc
 
     def to_json(self, path: Optional[str] = None, indent: int = 2) -> str:
         doc = json.dumps(self.to_dict(), indent=indent, sort_keys=True)

@@ -13,7 +13,10 @@ but on real hardware they often share one physical fabric; every second
 two link streams are concurrently busy is a second where the serializing
 DES and overlapped hardware can diverge (the sim-vs-real gap measurement
 ROADMAP item 2 calls for).  The sweep-line reports total overlap seconds
-and the fraction of the makespan affected as report metrics.
+and the fraction of the makespan affected as report metrics, and
+:func:`link_contention` expands the audit into a contention-exposure
+report: per-link overlap seconds, per-pair overlap, and the top
+offending event pairs (named), carried in the T010 finding's ``where``.
 """
 from __future__ import annotations
 
@@ -50,6 +53,91 @@ def _overlap_windows(
             if t > opened:
                 out.append((opened, t))
     return out
+
+
+def _merge_interval_list(
+    intervals: list[tuple[float, float]]
+) -> list[tuple[float, float]]:
+    """Union of busy intervals (zero-gap adjacency merged)."""
+    out: list[tuple[float, float]] = []
+    for start, end in sorted(intervals):
+        if out and start <= out[-1][1] + _EPS:
+            out[-1] = (out[-1][0], max(out[-1][1], end))
+        else:
+            out.append((start, end))
+    return out
+
+
+def _merge_busy(events: list) -> list[tuple[float, float]]:
+    return _merge_interval_list(
+        [(e.start, e.end) for e in events if e.end > e.start]
+    )
+
+
+def link_contention(
+    result: SimResult, top_pairs: int = 5
+) -> dict:
+    """Contention-exposure report over the link streams of a timeline.
+
+    Returns ``{"links": {device: overlap_s}, "pairs": [...],
+    "top_event_pairs": [...]}`` — per-link seconds spent concurrently busy
+    with ANY other link, per-device-pair overlap seconds, and the
+    ``top_pairs`` longest-overlapping event pairs with both events named.
+    Every second reported is a second where a serializing fabric would
+    stretch the simulated timeline (ROADMAP item 2's divergence budget).
+    """
+    by_device: dict[str, list] = {}
+    for e in result.events:
+        if e.device.startswith("link") and e.end > e.start:
+            by_device.setdefault(e.device, []).append(e)
+    devices = sorted(by_device)
+    links = {d: 0.0 for d in devices}
+    pairs = []
+    event_pairs = []
+    for i, da in enumerate(devices):
+        for db in devices[i + 1:]:
+            pair_s = 0.0
+            for sa, ea in _merge_busy(by_device[da]):
+                for sb, eb in _merge_busy(by_device[db]):
+                    pair_s += max(0.0, min(ea, eb) - max(sa, sb))
+            if pair_s > _EPS:
+                pairs.append({"a": da, "b": db, "overlap_s": pair_s})
+            for ev_a in by_device[da]:
+                for ev_b in by_device[db]:
+                    ov = max(
+                        0.0, min(ev_a.end, ev_b.end)
+                        - max(ev_a.start, ev_b.start)
+                    )
+                    if ov > _EPS:
+                        event_pairs.append(
+                            {
+                                "a": ev_a.name, "b": ev_b.name,
+                                "a_device": da, "b_device": db,
+                                "start": max(ev_a.start, ev_b.start),
+                                "overlap_s": ov,
+                            }
+                        )
+    # per-link exposure: union of this link's overlap windows against the
+    # union of every OTHER link's busy time
+    for d in devices:
+        other = [
+            iv
+            for d2 in devices
+            if d2 != d
+            for iv in _merge_busy(by_device[d2])
+        ]
+        exposure = 0.0
+        for sa, ea in _merge_busy(by_device[d]):
+            for sb, eb in _merge_interval_list(other):
+                exposure += max(0.0, min(ea, eb) - max(sa, sb))
+        links[d] = exposure
+    pairs.sort(key=lambda p: -p["overlap_s"])
+    event_pairs.sort(key=lambda p: -p["overlap_s"])
+    return {
+        "links": links,
+        "pairs": pairs,
+        "top_event_pairs": event_pairs[:top_pairs],
+    }
 
 
 def audit_timeline(
@@ -137,14 +225,24 @@ def audit_timeline(
     report.metrics["timeline_events"] = float(len(result.events))
     if overlap_s > _EPS:
         worst = max(windows, key=lambda w: w[1] - w[0])
+        contention = link_contention(result)
+        for dev, exposure in sorted(contention["links"].items()):
+            report.metrics[f"link_overlap_s[{dev}]"] = exposure
+        top = contention["top_event_pairs"]
+        pair_txt = "; ".join(
+            f"{p['a']} x {p['b']} ({p['overlap_s']:.6g}s)" for p in top[:3]
+        )
         report.info(
             "T010",
             f"{len(windows)} windows ({overlap_s:.6g}s, "
             f"{100 * overlap_s / result.makespan:.1f}% of makespan) have "
             ">= 2 link streams concurrently busy — the serializing DES "
             "and overlapped hardware can diverge here (worst window "
-            f"[{worst[0]:.6g}s, {worst[1]:.6g}s])",
+            f"[{worst[0]:.6g}s, {worst[1]:.6g}s]; top pairs: {pair_txt})",
             windows=len(windows),
+            links=contention["links"],
+            pairs=contention["pairs"],
+            top_event_pairs=top,
         )
     return report
 

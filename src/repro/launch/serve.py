@@ -19,6 +19,15 @@ Modes (composable):
     # engine + replay twin + priced sim, one parity verdict (CI gate)
     ... --parity --synthetic-db --report SERVE_parity.json
 
+    # static gate: replay the KV-block ledger symbolically and audit
+    # ProfileDB coverage (A005+), aborting before any device work on an
+    # error-level finding (the serving mirror of train.py --analyze)
+    ... --analyze --synthetic-db \
+        --trace-file benchmarks/traces/serve_acceptance.json
+
+    # re-check a serialized (possibly tampered) step plan on its own
+    ... --analyze-plan SERVE_plan.json
+
 ``--force-host-devices N`` (with ``--shard``) forces N XLA host devices
 and slot-shards the decode batch — it must be handled before JAX imports,
 so all repro imports are deferred into main() (calibrate_net.py idiom).
@@ -69,6 +78,17 @@ def _parse() -> argparse.Namespace:
                     help="run engine AND twin, emit the serve parity report")
     ap.add_argument("--calibrate", action="store_true",
                     help="measure the serve kernels into --db and exit")
+    ap.add_argument("--analyze", action="store_true",
+                    help="statically verify the serve plan (repro.analysis "
+                         "R codes + A005+ coverage when a DB is supplied) "
+                         "before touching devices; abort on any error-level "
+                         "finding (docs/analysis.md)")
+    ap.add_argument("--analyze-plan", default="",
+                    help="check a serialized ServePlan JSON (no trace "
+                         "replay: verifies the plan file as-is) and exit")
+    ap.add_argument("--analyze-report", default="",
+                    help="write the --analyze/--analyze-plan report JSON "
+                         "here")
     ap.add_argument("--db", default="",
                     help="ProfileDB path for serve pricing / calibration")
     ap.add_argument("--synthetic-db", action="store_true",
@@ -191,6 +211,19 @@ def main() -> int:
         block_size=args.block_size, chunk=args.chunk,
     )
 
+    if args.analyze_plan:
+        from repro.analysis.serve_checks import ServePlan, check_serve_plan
+
+        plan = ServePlan.load(args.analyze_plan)
+        report = check_serve_plan(plan, name=f"plan:{args.analyze_plan}")
+        for line in report.summary_lines():
+            print(f"[analyze] {line}")
+        if args.analyze_report:
+            report.to_json(args.analyze_report)
+            print(f"[analyze] report written to {args.analyze_report}")
+        report.raise_on_errors()
+        return 0
+
     if args.calibrate:
         import jax
 
@@ -225,6 +258,26 @@ def main() -> int:
     trace = _build_trace(args)
     if trace is None:
         return 0
+
+    if args.analyze:
+        # statically reject leaks / double-frees / over-reservations and
+        # name every pricing query that would miss the DB — before JAX,
+        # the model, or any device is touched
+        from repro.analysis.analyzer import analyze_serve_trace
+
+        report = analyze_serve_trace(
+            trace, cfg.name, scfg,
+            db=_serve_db(args, cfg, scfg),
+            db_path=args.db or "<synthetic>",
+        )
+        for line in report.summary_lines():
+            print(f"[analyze] {line}")
+        if args.analyze_report:
+            report.to_json(args.analyze_report)
+            print(f"[analyze] report written to {args.analyze_report}")
+        report.raise_on_errors()
+        if not (args.simulate or args.parity):
+            return 0
 
     def _show(tag, latency):
         print(f"[serve] {tag}: {latency['requests']} requests, "

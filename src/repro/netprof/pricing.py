@@ -62,6 +62,12 @@ class CollectivePricer:
     def profiled_kinds(self) -> list[str]:
         return sorted(self.models)
 
+    def exact_hit(self, kind: str, nbytes: float, group: int) -> bool:
+        """True when (kind, payload, group) has an exact sweep entry — the
+        same key :meth:`_resolve` consults, exposed for the static coverage
+        auditor (``repro.analysis.coverage``)."""
+        return (kind, int(round(nbytes)), int(group)) in self._exact
+
     def price(
         self, kind: str, nbytes: float, group: int, link: LinkSpec
     ) -> tuple[float, str]:

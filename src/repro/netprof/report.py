@@ -12,6 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.database import ProfileDB
+from repro.core.graph import DataflowGraph
 from repro.core.hardware import PlatformSpec
 from repro.core.simulator import simulate
 from repro.netprof.pricing import PROV_DB, PROV_FIT, PROV_RING, graph_provenance
@@ -71,7 +72,7 @@ def measured_vs_ring(
     )
 
 
-def acceptance_graph(microbatch: int = 2, seq: int = 64):
+def acceptance_graph(microbatch: int = 2, seq: int = 64) -> DataflowGraph:
     """The canonical pp + int8-dp + MoE-a2a graph used by reports/tests.
 
     A smoke MoE config through ``model_pipeline_graph`` with dp=2, pp=2,

@@ -71,22 +71,32 @@ class BlockAllocator:
     def alloc(self, n: int, owner: Hashable) -> list[int]:
         """Allocate ``n`` blocks for ``owner`` (lowest ids first)."""
         if n < 0:
-            raise ValueError(f"cannot allocate {n} blocks")
+            raise ValueError(f"request {owner!r}: cannot allocate {n} blocks")
         if n > len(self._free):
             raise OutOfBlocksError(
-                f"requested {n} blocks, {len(self._free)} free "
-                f"(pool {self.num_blocks})"
+                f"request {owner!r}: requested {n} blocks, "
+                f"{len(self._free)} free (pool {self.num_blocks}) — "
+                f"statically detectable as R003"
             )
         got, self._free = self._free[:n], self._free[n:]
         for b in got:
             self._owner[b] = owner
         return got
 
-    def free(self, blocks: list[int]) -> None:
-        """Return blocks to the pool; freeing an unowned block raises."""
+    def free(self, blocks: list[int], owner: Hashable | None = None) -> None:
+        """Return blocks to the pool; freeing an unowned block raises.
+
+        ``owner`` (when given) names the request in the error — the dynamic
+        counterpart of the static double-free check (R002).
+        """
+        who = "" if owner is None else f"request {owner!r}: "
         for b in blocks:
             if b not in self._owner:
-                raise ValueError(f"block {b} is not allocated")
+                raise ValueError(
+                    f"{who}block {b} is not allocated — double-free or "
+                    f"free of a never-owned block (statically detectable "
+                    f"as R002)"
+                )
         for b in blocks:
             del self._owner[b]
         self._free = sorted(self._free + list(blocks))
@@ -94,7 +104,7 @@ class BlockAllocator:
     def free_owner(self, owner: Hashable) -> list[int]:
         """Free every block of ``owner``; returns the freed ids."""
         blocks = self.blocks_of(owner)
-        self.free(blocks)
+        self.free(blocks, owner=owner)
         return blocks
 
 

@@ -111,7 +111,7 @@ def serve_node_features(
 
 def serve_node_meta(
     cfg: ArchConfig, scfg: ServeConfig, family: str, x: int
-) -> dict:
+) -> dict[str, object]:
     """The ``node.meta["serve"]`` pricing annotation."""
     return {
         "family": family,
@@ -137,7 +137,7 @@ class ServePricer:
     def __init__(self, db: ProfileDB, platform: str):
         self.db = db
         self.platform = platform
-        acc: dict = {}
+        acc: dict[tuple[str, str], dict[int, dict[int, list[float]]]] = {}
         for fam in SERVE_FAMILIES:
             xkey = _XKEY[fam]
             for e in db.entries(platform, fam):
@@ -148,7 +148,9 @@ class ServePricer:
                 acc.setdefault((fam, arch), {}).setdefault(
                     int(view), {}
                 ).setdefault(int(x), []).append(float(e.mean_s))
-        self.curves: dict = {}
+        self.curves: dict[
+            tuple[str, str], dict[int, tuple[np.ndarray, np.ndarray]]
+        ] = {}
         for key, by_view in acc.items():
             self.curves[key] = {
                 view: (
@@ -188,7 +190,9 @@ class ServePricer:
         return t, PROV_FIT
 
     @staticmethod
-    def _interp_curve(curve, lx: float) -> float:
+    def _interp_curve(
+        curve: tuple[np.ndarray, np.ndarray], lx: float
+    ) -> float:
         """log-time at log-x on one view curve, edge-slope extended."""
         log_x, log_t = curve
         if len(log_x) == 1:
@@ -200,7 +204,12 @@ class ServePricer:
         anchor = i[0] if lx < log_x[0] else i[1]
         return float(log_t[anchor] + slope * (lx - log_x[anchor]))
 
-    def _interp_views(self, views: dict, x: float, view: float) -> float:
+    def _interp_views(
+        self,
+        views: dict[int, tuple[np.ndarray, np.ndarray]],
+        x: float,
+        view: float,
+    ) -> float:
         lx = math.log(max(x, 1.0))
         vkeys = sorted(views)
         if int(view) in views:

@@ -204,7 +204,14 @@ class ServeEngine:
         for rid, slot in plan.admitted:
             req = self.requests[rid]
             self.slot_req[slot] = req
-            blocks = self.sched.slot_state(slot).blocks
+            state = self.sched.slot_state(slot)
+            if state is None:
+                raise RuntimeError(
+                    f"step {plan.index}: request {rid} admitted to slot "
+                    f"{slot} but the scheduler holds no slot state "
+                    f"(statically detectable as R006)"
+                )
+            blocks = state.blocks
             self._tables[slot] = scratch
             self._tables[slot, : len(blocks)] = blocks
 
@@ -212,6 +219,13 @@ class ServeEngine:
         if plan.prefill is not None:
             pf = plan.prefill
             req = self.slot_req[pf.slot]
+            if req is None or req.rid != pf.rid:
+                raise RuntimeError(
+                    f"step {plan.index}: prefill chunk targets request "
+                    f"{pf.rid} in slot {pf.slot}, but the slot holds "
+                    f"{'no request' if req is None else f'request {req.rid}'} "
+                    f"(statically detectable as R006)"
+                )
             toks = np.zeros((1, pf.bucket), np.int32)
             toks[0, : pf.width] = req.prompt[pf.start : pf.start + pf.width]
             logits, self.pool = self._prefill_fn(pf.bucket)(
@@ -228,8 +242,16 @@ class ServeEngine:
             lengths = np.zeros((self.slots,), np.int32)
             tables = np.full_like(self._tables, scratch)
             for s in plan.decode_slots:
-                toks[s, 0] = self.slot_req[s].output[-1]
-                lengths[s] = self.sched.slot_state(s).length
+                req = self.slot_req[s]
+                state = self.sched.slot_state(s)
+                if req is None or state is None:
+                    raise RuntimeError(
+                        f"step {plan.index}: decode batch includes slot "
+                        f"{s} with no admitted request (statically "
+                        f"detectable as R006)"
+                    )
+                toks[s, 0] = req.output[-1]
+                lengths[s] = state.length
                 tables[s] = self._tables[s]
             logits, self.pool = self._decode(
                 self.params, self.pool,
@@ -252,6 +274,12 @@ class ServeEngine:
         self.step_durations.append(dur)
         for slot, tok in new_tokens.items():
             req = self.slot_req[slot]
+            if req is None:
+                raise RuntimeError(
+                    f"step {plan.index}: token produced for slot {slot} "
+                    f"with no admitted request (statically detectable "
+                    f"as R006)"
+                )
             req.output.append(tok)
             req.token_times_s.append(t_end)
             if len(req.output) == 1:
@@ -270,10 +298,20 @@ class ServeEngine:
         steps = 0
         while self.sched.outstanding():
             if not self.step():
-                raise RuntimeError("serving stalled with work outstanding")
+                queued = [q.rid for q in self.sched.queue]
+                live = [r.rid for r in self.slot_req if r is not None]
+                raise RuntimeError(
+                    f"serving stalled at step {len(self.step_log)} with "
+                    f"work outstanding (queued requests {queued}, live "
+                    f"requests {live})"
+                )
             steps += 1
             if steps > max_steps:
-                raise RuntimeError("serving did not converge")
+                raise RuntimeError(
+                    f"serving did not converge within {max_steps} steps "
+                    f"({len(self.finished)}/{len(self.requests)} requests "
+                    f"finished)"
+                )
         return self.finished
 
 
@@ -288,7 +326,7 @@ def _batch_axis(full, one) -> int:
     return 0
 
 
-def splice_cache(full, one, slot: int):
+def splice_cache(full, one, slot: int) -> object:
     """Functional helper: write sequence-0 of `one` into slot `slot` of
     `full` (non-paged whole-cache path; kept separate for unit testing)."""
 

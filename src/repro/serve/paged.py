@@ -58,7 +58,7 @@ def check_family(cfg: ArchConfig) -> None:
         )
 
 
-def init_pool(cfg: ArchConfig, scfg: ServeConfig):
+def init_pool(cfg: ArchConfig, scfg: ServeConfig) -> dict[str, jax.Array]:
     """Zero-initialized paged KV pool for every layer."""
     K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     shape = (
@@ -111,7 +111,8 @@ def _paged_attention(attn_p, h, cfg, pool_k, pool_v, *,
 
 
 def prefill_chunk(params, pool, tokens, start, width, table_row,
-                  scratch_block, cfg: ArchConfig, scfg: ServeConfig):
+                  scratch_block, cfg: ArchConfig, scfg: ServeConfig,
+                  ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One prompt chunk of one request through the whole stack.
 
     tokens: (1, bucket) int32, right-padded with zeros beyond ``width``;
@@ -159,7 +160,8 @@ def prefill_chunk(params, pool, tokens, start, width, table_row,
 
 
 def decode_batch(params, pool, tokens, lengths, tables,
-                 cfg: ArchConfig, scfg: ServeConfig):
+                 cfg: ArchConfig, scfg: ServeConfig,
+                 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """One decode token for every slot lane (static batch = slots).
 
     tokens: (S, 1) int32; lengths: (S,) cache positions already written

@@ -69,6 +69,19 @@ class ServeConfig:
             return self.num_blocks
         return self.slots * self.max_blocks_per_slot + 1
 
+    def bucket(self, width: int) -> int:
+        """Pow2 chunk bucket (caps jit retraces at log2(chunk) variants).
+
+        Shared by the scheduler and the static coverage auditor
+        (``repro.analysis.coverage``): the distinct prefill queries a trace
+        will issue are fully determined by this function and the prompt
+        lengths, which is what makes ProfileDB coverage checkable offline.
+        """
+        b = 1
+        while b < width:
+            b *= 2
+        return min(b, self.chunk)
+
     def effective_max_tokens(self, prompt_len: int, max_tokens: int) -> int:
         """Output-token budget capped to KV capacity.
 
@@ -259,7 +272,7 @@ class ServeScheduler:
                 width = min(self.cfg.chunk, s.prompt_len - s.pos)
                 prefill = PrefillChunk(
                     slot=slot, rid=s.rid, start=s.pos, width=width,
-                    bucket=self._bucket(width),
+                    bucket=self.cfg.bucket(width),
                     final=s.pos + width >= s.prompt_len,
                 )
                 break
@@ -276,13 +289,6 @@ class ServeScheduler:
             self.step_index += 1
         return plan
 
-    def _bucket(self, width: int) -> int:
-        """Pow2 chunk bucket (caps jit retraces at log2(chunk) variants)."""
-        b = 1
-        while b < width:
-            b *= 2
-        return min(b, self.cfg.chunk)
-
     # -- progress --------------------------------------------------------------
 
     def commit(
@@ -296,7 +302,14 @@ class ServeScheduler:
         out = CommitResult()
         if plan.prefill is not None:
             s = self.slots[plan.prefill.slot]
-            assert s is not None and s.rid == plan.prefill.rid
+            if s is None or s.rid != plan.prefill.rid:
+                raise ValueError(
+                    f"step {plan.index}: prefill chunk targets request "
+                    f"{plan.prefill.rid} in slot {plan.prefill.slot}, but the "
+                    f"slot holds "
+                    f"{'no request' if s is None else f'request {s.rid}'} "
+                    f"(statically detectable as R006)"
+                )
             s.pos += plan.prefill.width
             if plan.prefill.final:
                 s.phase = "decode"
@@ -305,21 +318,31 @@ class ServeScheduler:
                 done = s.emitted >= s.max_tokens
                 out.tokens.append(TokenEvent(s.rid, first=True, done=done))
                 if done:
-                    self._finish(plan.prefill.slot, out)
+                    self._finish(plan.prefill.slot, plan.index, out)
         for slot in plan.decode_slots:
             s = self.slots[slot]
-            assert s is not None and s.phase == "decode"
+            if s is None or s.phase != "decode":
+                raise ValueError(
+                    f"step {plan.index}: decode batch includes slot {slot}, "
+                    f"which holds "
+                    f"{'no request' if s is None else f'request {s.rid} still in {s.phase}'} "
+                    f"(statically detectable as R006)"
+                )
             s.length += 1
             s.emitted += 1
             done = s.emitted >= s.max_tokens or slot in eos_slots
             out.tokens.append(TokenEvent(s.rid, first=False, done=done))
             if done:
-                self._finish(slot, out)
+                self._finish(slot, plan.index, out)
         return out
 
-    def _finish(self, slot: int, out: CommitResult) -> None:
+    def _finish(self, slot: int, step_index: int, out: CommitResult) -> None:
         s = self.slots[slot]
-        assert s is not None
+        if s is None:
+            raise ValueError(
+                f"step {step_index}: cannot finish slot {slot}: no request "
+                f"admitted (statically detectable as R006)"
+            )
         self.allocator.free_owner(s.rid)
         self.slots[slot] = None
         out.finished.append(s.rid)

@@ -81,7 +81,13 @@ def _drive(
         if plan.empty:
             nxt = sched.next_arrival()
             if nxt is None:
-                raise RuntimeError("serve sim stalled with work outstanding")
+                queued = [q.rid for q in sched.queue]
+                live = [s.rid for s in sched.slots if s is not None]
+                raise RuntimeError(
+                    f"serve sim stalled at step {sched.step_index} with "
+                    f"work outstanding (queued requests {queued}, live "
+                    f"requests {live})"
+                )
             sched.skip_to(nxt)
             continue
         t0 = sched.clock

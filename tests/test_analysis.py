@@ -365,6 +365,72 @@ def test_link_overlap_audit_t010():
     assert report.metrics["link_overlap_fraction"] == pytest.approx(0.25)
 
 
+def test_link_contention_exposure_report_t010():
+    from repro.analysis.timeline_checks import link_contention
+
+    # dp0 and dp1 contend for 0.5s; pp runs alone and is never exposed
+    res = _result([
+        SimEvent(0, "g0", "all-reduce", "link:dp0", 0.0, 1.0),
+        SimEvent(1, "g1", "all-reduce", "link:dp1", 0.5, 1.5),
+        SimEvent(2, "g2", "all-reduce", "link:dp1", 2.0, 2.5),
+        SimEvent(3, "p0", "collective-permute", "link:pp", 3.0, 4.0),
+    ], 4.0)
+    detail = link_contention(res)
+    assert detail["links"]["link:dp0"] == pytest.approx(0.5)
+    assert detail["links"]["link:dp1"] == pytest.approx(0.5)
+    assert detail["links"]["link:pp"] == 0.0
+    (pair,) = detail["pairs"]
+    assert (pair["a"], pair["b"]) == ("link:dp0", "link:dp1")
+    assert pair["overlap_s"] == pytest.approx(0.5)
+    top = detail["top_event_pairs"]
+    assert top and top[0]["overlap_s"] == pytest.approx(0.5)
+    assert {top[0]["a"], top[0]["b"]} == {"g0", "g1"}
+    assert top[0]["start"] == pytest.approx(0.5)
+    # the same breakdown rides on the T010 finding and the metrics
+    report = audit_timeline(res)
+    (t010,) = [d for d in report.findings if d.code == "T010"]
+    assert t010.where["links"] == detail["links"]
+    assert t010.where["top_event_pairs"] == top
+    assert report.metrics["link_overlap_s[link:dp0]"] == pytest.approx(0.5)
+    assert report.metrics["link_overlap_s[link:pp]"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the code table is the stable API: append-only, formatted, documented
+# ---------------------------------------------------------------------------
+
+def test_diagnostic_code_table_is_append_only_and_documented():
+    import os
+    import re
+
+    # codes shipped through PR 8 — removing or renumbering any of these is
+    # a breaking change (the autotuner, CI gate, and launcher key on them);
+    # new codes may only be appended
+    shipped = (
+        [f"G{i:03d}" for i in range(1, 7)]
+        + [f"G{i:03d}" for i in range(10, 14)]
+        + [f"A{i:03d}" for i in range(1, 10)]
+        + [f"S{i:03d}" for i in range(1, 14)]
+        + ["T001", "T002", "T003", "T004", "T010"]
+        + [f"R{i:03d}" for i in range(1, 8)]
+    )
+    missing = [c for c in shipped if c not in DIAGNOSTIC_CODES]
+    assert not missing, f"shipped codes removed: {missing}"
+    for code, desc in DIAGNOSTIC_CODES.items():
+        assert re.fullmatch(r"[GASTR]\d{3}", code), code
+        assert desc.strip(), f"{code} has no description"
+    docs = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "docs", "analysis.md",
+    )
+    with open(docs) as f:
+        text = f.read()
+    undocumented = [c for c in DIAGNOSTIC_CODES if c not in text]
+    assert not undocumented, (
+        f"codes missing from docs/analysis.md: {undocumented}"
+    )
+
+
 def test_real_simulated_timeline_is_clean():
     from repro.core.autotuner import layer_cost_from_config
     from repro.core.strategy import pipeline_graph

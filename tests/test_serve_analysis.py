@@ -1,0 +1,474 @@
+"""Serve-plan sanitizer (R codes) + ProfileDB coverage auditor (A005+).
+
+Two halves of ``repro.analysis``'s pre-run serving gate:
+
+* ``serve_checks`` — the acceptance trace must verify clean, and a corpus
+  of tampered :class:`ServePlan`s must trigger every R code with the
+  offending request id and step index named;
+* ``coverage`` — the classification of every statically-enumerated
+  pricing query (exact / interpolation / extrapolation / fallback) must
+  match the ``time_provenance`` stamps the pricer actually produces when
+  the same plan is priced.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.analysis import PlanVerificationError
+from repro.analysis.coverage import (
+    CLASS_EXACT,
+    CLASS_FALLBACK,
+    CLASS_INTERP,
+    CLASS_TO_PROVENANCE,
+    audit_collective_coverage,
+    audit_serve_coverage,
+    classify_collective_query,
+    classify_serve_query,
+    enumerate_serve_queries,
+)
+from repro.analysis.serve_checks import (
+    AdmitRecord,
+    FreeRecord,
+    ServePlan,
+    audit_serve_plan,
+    check_serve_plan,
+    extract_serve_plan,
+    lint_serve_trace,
+)
+from repro.core.database import ProfileDB, ProfileEntry
+from repro.serve.cost import ServePricer, synthetic_serve_calibration
+from repro.serve.policy import ServeConfig
+from repro.serve.trace import TraceRequest, load_trace
+
+ARCH = "llama3.2-1b"
+TRACE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "traces", "serve_acceptance.json",
+)
+
+
+def _scfg(**kw) -> ServeConfig:
+    base = dict(slots=2, max_len=64, block_size=8, chunk=8)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _trace():
+    return load_trace(TRACE_PATH)
+
+
+def _plan() -> ServePlan:
+    return extract_serve_plan(_trace(), _scfg())
+
+
+def _db(slot_grid=(1, 2, 4), buckets=(1, 2, 4, 8, 16, 32), arch=ARCH):
+    db = ProfileDB()
+    scfg = _scfg()
+    synthetic_serve_calibration(
+        db, arch, "cpu_host", views=(scfg.view_len,),
+        buckets=buckets, slot_grid=slot_grid,
+    )
+    return db
+
+
+# ---------------------------------------------------------------------------
+# the committed acceptance trace verifies clean
+# ---------------------------------------------------------------------------
+
+def test_acceptance_trace_plan_is_clean():
+    report = audit_serve_plan(_trace(), _scfg())
+    assert report.ok, report.codes()
+    assert report.metrics["serve_plan_requests"] == 16
+    assert report.metrics["serve_plan_steps"] > 0
+    assert 0 < report.metrics["serve_peak_pool_utilization"] <= 1.0
+    assert report.metrics["serve_tokens_total"] > 16   # >= 1 token each
+
+
+def test_serve_plan_json_roundtrip(tmp_path):
+    plan = _plan()
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = ServePlan.load(path)
+    assert loaded.to_dict() == plan.to_dict()
+    assert check_serve_plan(loaded).ok
+
+
+def test_trace_lint_rejects_oversized_and_duplicate_requests():
+    scfg = _scfg()
+    trace = [
+        TraceRequest(rid=0, arrival_s=0.0, prompt_len=65, max_new_tokens=4),
+        TraceRequest(rid=0, arrival_s=0.0, prompt_len=8, max_new_tokens=4),
+    ]
+    report = lint_serve_trace(trace, scfg)
+    assert "R004" in report.codes()     # prompt beyond max_len
+    assert "R005" in report.codes()     # duplicate rid
+    # a footprint that can never fit the pool is caught pre-extraction
+    tiny = _scfg(num_blocks=3)
+    report = lint_serve_trace(
+        [TraceRequest(rid=1, arrival_s=0.0, prompt_len=60,
+                      max_new_tokens=4)],
+        tiny,
+    )
+    assert "R003" in report.codes()
+
+
+# ---------------------------------------------------------------------------
+# tampered-plan corpus: every R code fires, naming rid and step
+# ---------------------------------------------------------------------------
+
+def _replace_step(plan: ServePlan, i: int, **kw) -> ServePlan:
+    steps = list(plan.steps)
+    steps[i] = dataclasses.replace(steps[i], **kw)
+    return dataclasses.replace(plan, steps=steps)
+
+
+def _tamper_r001_leak(plan):
+    for i in range(len(plan.steps) - 1, -1, -1):
+        if plan.steps[i].freed:
+            return _replace_step(plan, i, freed=())
+    raise AssertionError("no frees in plan")
+
+
+def _tamper_r002_double_free(plan):
+    for i, s in enumerate(plan.steps):
+        if s.freed:
+            return _replace_step(plan, i, freed=s.freed + (s.freed[0],))
+    raise AssertionError("no frees in plan")
+
+
+def _tamper_r003_out_of_pool(plan):
+    for i, s in enumerate(plan.steps):
+        if s.admitted:
+            adm = s.admitted[0]
+            bad = dataclasses.replace(
+                adm, blocks=(plan.num_blocks + 7,) + adm.blocks[1:]
+            )
+            return _replace_step(plan, i, admitted=(bad,) + s.admitted[1:])
+    raise AssertionError("no admissions in plan")
+
+
+def _tamper_r004_budget_above_cap(plan):
+    for i, s in enumerate(plan.steps):
+        if s.admitted:
+            adm = s.admitted[0]
+            bad = dataclasses.replace(adm, budget=adm.budget + 50)
+            return _replace_step(plan, i, admitted=(bad,) + s.admitted[1:])
+    raise AssertionError("no admissions in plan")
+
+
+def _tamper_r005_admit_before_arrival(plan):
+    arrivals = {int(r["rid"]): float(r["arrival_s"]) for r in plan.requests}
+    for i, s in enumerate(plan.steps):
+        for adm in s.admitted:
+            if arrivals[adm.rid] > 0:
+                return _replace_step(
+                    plan, i, clock_s=arrivals[adm.rid] - 1.0
+                )
+    raise AssertionError("every request arrives at t=0")
+
+
+def _tamper_r006_duplicate_decode_slot(plan):
+    for i, s in enumerate(plan.steps):
+        if s.decode_slots:
+            dup = s.decode_slots + (s.decode_slots[0],)
+            return _replace_step(plan, i, decode_slots=dup)
+    raise AssertionError("no decode steps in plan")
+
+
+def _tamper_r007_prefill_outside_prompt(plan):
+    for i, s in enumerate(plan.steps):
+        if s.prefill is not None:
+            slot, rid, start, width, final = s.prefill
+            return _replace_step(
+                plan, i, prefill=(slot, rid, start, width + 100, final)
+            )
+    raise AssertionError("no prefill steps in plan")
+
+
+_TAMPERS = {
+    "R001": _tamper_r001_leak,
+    "R002": _tamper_r002_double_free,
+    "R003": _tamper_r003_out_of_pool,
+    "R004": _tamper_r004_budget_above_cap,
+    "R005": _tamper_r005_admit_before_arrival,
+    "R006": _tamper_r006_duplicate_decode_slot,
+    "R007": _tamper_r007_prefill_outside_prompt,
+}
+
+
+@pytest.mark.parametrize("code", sorted(_TAMPERS))
+def test_tampered_plan_triggers_each_r_code(code):
+    report = check_serve_plan(_TAMPERS[code](_plan()), name=f"tamper:{code}")
+    assert not report.ok
+    assert code in report.codes(), report.codes()
+    # every finding of the seeded code names a request and a step (the
+    # end-of-plan leak names the rid; in-step findings also carry `step`)
+    for d in report.by_code(code):
+        assert "rid" in d.where or "slot" in d.where, d.where
+
+
+def test_corpus_covers_every_r_code():
+    seeded = set()
+    for code, tamper in _TAMPERS.items():
+        seeded |= {
+            c for c in check_serve_plan(tamper(_plan())).codes()
+            if c.startswith("R")
+        }
+    assert seeded >= {f"R00{i}" for i in range(1, 8)}
+
+
+def test_untampered_plans_never_fire(seed_range=range(3)):
+    # regression guard for the sanitizer itself: real scheduler output is
+    # clean under varied serving shapes
+    for slots, chunk in ((1, 4), (2, 8), (4, 16)):
+        scfg = _scfg(slots=slots, chunk=chunk)
+        report = check_serve_plan(extract_serve_plan(_trace(), scfg))
+        assert report.ok, (slots, chunk, report.codes())
+
+
+# ---------------------------------------------------------------------------
+# dynamic error paths mirror the static codes
+# ---------------------------------------------------------------------------
+
+def test_allocator_errors_name_request_and_code():
+    from repro.serve.blocks import BlockAllocator, OutOfBlocksError
+
+    alloc = BlockAllocator(num_blocks=4, block_size=8)
+    with pytest.raises(OutOfBlocksError, match=r"request 7.*R003"):
+        alloc.alloc(5, owner=7)
+    got = alloc.alloc(2, owner=7)
+    alloc.free(got, owner=7)
+    with pytest.raises(ValueError, match=r"request 7.*R002"):
+        alloc.free(got, owner=7)
+
+
+# ---------------------------------------------------------------------------
+# coverage auditor: classification
+# ---------------------------------------------------------------------------
+
+def test_coverage_full_grid_all_exact():
+    cov = audit_serve_coverage(_trace(), ARCH, _scfg(), _db())
+    assert cov.report.ok
+    assert cov.report.metrics["coverage_exact"] == (
+        cov.report.metrics["coverage_queries"]
+    )
+    assert cov.families["serve_prefill"]["exact_ratio"] == 1.0
+    assert cov.families["serve_decode"]["exact_ratio"] == 1.0
+    assert cov.grid == [] and cov.commands == []
+    assert cov.report.codes() == []
+
+
+def test_coverage_gapped_grid_interpolates():
+    # decode batch (slots=2) sits between the measured 1 and 4
+    cov = audit_serve_coverage(_trace(), ARCH, _scfg(), _db(slot_grid=(1, 4)))
+    assert cov.report.ok                      # info + warnings, no errors
+    assert {"A007", "A008", "A009"} <= set(cov.report.codes())
+    assert cov.report.metrics["coverage_interpolation"] == 1
+    assert cov.families["serve_decode"]["exact_ratio"] == 0.0
+    assert cov.families["serve_prefill"]["exact_ratio"] == 1.0
+    (entry,) = cov.grid
+    assert entry["family"] == "serve_decode"
+    assert entry["args"]["slots"] == 2
+    (cmd,) = cov.commands
+    assert "repro.launch.serve" in cmd and "--calibrate" in cmd
+
+
+def test_coverage_sparse_buckets_extrapolate():
+    # prompts need buckets {4, 8}; only {1, 2} are measured -> beyond grid
+    cov = audit_serve_coverage(
+        _trace(), ARCH, _scfg(), _db(buckets=(1, 2), slot_grid=(1, 2, 4))
+    )
+    assert cov.report.ok
+    assert "A006" in cov.report.codes()
+    assert cov.report.metrics["coverage_extrapolation"] >= 2
+    assert cov.families["serve_prefill"]["exact_ratio"] == 0.0
+
+
+def test_coverage_unmeasured_arch_is_an_error_a005():
+    cov = audit_serve_coverage(
+        _trace(), ARCH, _scfg(), _db(arch="mamba2-2.7b")
+    )
+    assert not cov.report.ok
+    assert "A005" in cov.report.codes()
+    assert cov.report.metrics["coverage_fallback"] == (
+        cov.report.metrics["coverage_queries"]
+    )
+    with pytest.raises(PlanVerificationError):
+        cov.report.raise_on_errors()
+
+
+def test_calibration_grid_closes_the_gaps():
+    scfg = _scfg()
+    db = _db(slot_grid=(1, 4), buckets=(1, 2))
+    first = audit_serve_coverage(_trace(), ARCH, scfg, db)
+    assert first.grid
+    # "measure" exactly the emitted grid, nothing else
+    for entry in first.grid:
+        db.add(
+            "cpu_host", entry["family"],
+            ProfileEntry(args=dict(entry["args"]), mean_s=1e-3, std_s=0.0,
+                         n=1, flops=0.0, bytes=0.0),
+        )
+    second = audit_serve_coverage(_trace(), ARCH, scfg, db)
+    assert second.report.metrics["coverage_exact"] == (
+        second.report.metrics["coverage_queries"]
+    )
+    assert second.grid == []
+
+
+def test_enumeration_is_timing_independent():
+    # the query set depends only on (trace, scfg) arithmetic — the same
+    # queries fall out of any per-step cost the scheduler might see
+    queries = enumerate_serve_queries(_trace(), ARCH, _scfg())
+    families = {q.family for q in queries}
+    assert families == {"serve_prefill", "serve_decode"}
+    buckets = sorted(
+        q.args_dict["tokens"] for q in queries
+        if q.family == "serve_prefill"
+    )
+    assert buckets == [4, 8]          # prompts 8..24 in chunk-8 strides
+    (dec,) = [q for q in queries if q.family == "serve_decode"]
+    assert dec.args_dict["slots"] == 2
+    assert dec.count > 0              # total decode-token upper bound
+
+
+# ---------------------------------------------------------------------------
+# classification vs the provenance the pricer actually stamps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "db_builder",
+    [
+        lambda: _db(),                                  # all exact
+        lambda: _db(slot_grid=(1, 4)),                  # decode interpolates
+        lambda: _db(buckets=(1, 2), slot_grid=(1, 4)),  # prefill extrapolates
+        lambda: _db(arch="mamba2-2.7b"),                # everything falls back
+    ],
+    ids=["exact", "interp", "extrap", "fallback"],
+)
+def test_serve_classification_matches_stamped_provenance(db_builder):
+    from repro.configs.base import get_config, smoke_variant
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.hardware import CPU_HOST
+    from repro.serve.cost import _XKEY
+    from repro.serve.sim import simulate_serve
+
+    db = db_builder()
+    scfg = _scfg()
+    cfg = smoke_variant(get_config(ARCH))
+    est = OpTimeEstimator(CPU_HOST, db=db, use_learned=False)
+    res = simulate_serve(_trace(), cfg, scfg, est)
+    pricer = ServePricer(db, "cpu_host")
+
+    queries = {
+        (q.family, q.args_dict[_XKEY[q.family]]):
+            classify_serve_query(pricer, q)
+        for q in enumerate_serve_queries(_trace(), cfg.name, scfg)
+    }
+    checked = 0
+    for node in res.graph.nodes:
+        serve = node.meta.get("serve")
+        if serve is None:
+            continue
+        cls = queries[(serve["family"], serve[_XKEY[serve["family"]]])]
+        assert node.meta["time_provenance"] in CLASS_TO_PROVENANCE[cls], (
+            node.name, cls, node.meta["time_provenance"]
+        )
+        checked += 1
+    assert checked == len(res.graph.nodes) > 0
+
+
+def test_collective_classification_matches_priced_provenance():
+    from repro.core.graph import DataflowGraph
+    from repro.core.hardware import TPU_V5E
+    from repro.netprof.pricing import CollectivePricer
+    from repro.netprof.sweep import synthetic_calibration
+
+    db = ProfileDB()
+    synthetic_calibration(
+        db, TPU_V5E.name, groups=(2, 4),
+        payload_bytes=(4096, 65536), collectives=("all-reduce",),
+    )
+    pricer = CollectivePricer(db, TPU_V5E)
+    link = TPU_V5E.link_for("ici")
+
+    g = DataflowGraph("cov")
+    cases = [
+        ("exact", "all-reduce", 4096.0, 4, CLASS_EXACT),
+        ("interp", "all-reduce", 16000.0, 4, CLASS_INTERP),
+        ("extrap", "all-reduce", 2.0 ** 30, 4, "extrapolation"),
+        ("fallback", "all-gather", 4096.0, 4, CLASS_FALLBACK),
+    ]
+    for name, kind, b, grp, _ in cases:
+        g.add(name, kind, link_kind="ici", group_size=grp, comm_bytes=b)
+
+    cov = audit_collective_coverage(g, pricer, db_path="db.json")
+    by_class = {(q["family"], q["args"]["per_device_bytes"]): q["class"]
+                for q in cov.queries}
+    for _, kind, b, grp, expect in cases:
+        cls = by_class[(kind, int(round(b)))]
+        assert cls == expect, (kind, b, cls)
+        t, prov = pricer.price(kind, b, grp, link)
+        assert prov in CLASS_TO_PROVENANCE[cls], (kind, b, cls, prov)
+    assert "A005" in cov.report.codes()       # the all-gather fallback
+    assert any("calibrate_net.py" in c for c in cov.commands)
+
+
+# ---------------------------------------------------------------------------
+# wiring: analyzer entry points and the launcher gate
+# ---------------------------------------------------------------------------
+
+def test_analyze_serve_trace_attaches_coverage_document():
+    from repro.analysis import analyze_serve_trace
+
+    report = analyze_serve_trace(_trace(), ARCH, _scfg(), db=_db())
+    assert report.ok
+    doc = report.extras["coverage"][ARCH]
+    assert set(doc) == {
+        "name", "ok", "queries", "families", "calibration_grid", "commands"
+    }
+    assert doc["ok"] and doc["queries"]
+    rendered = json.loads(report.to_json())
+    assert rendered["extras"]["coverage"][ARCH]["families"]
+
+
+def test_analyze_serve_sweep_acceptance_clean_for_every_arch():
+    from repro.analysis import analyze_serve_sweep
+    from repro.configs.base import list_archs
+
+    merged = analyze_serve_sweep(_trace())
+    assert merged.ok, merged.codes()
+    assert merged.metrics["serve_plans_analyzed"] == len(list_archs())
+    # the sweep's synthetic grids cover the acceptance trace exactly
+    assert merged.metrics["coverage_exact"] == (
+        merged.metrics["coverage_queries"]
+    )
+
+
+def test_launch_serve_analyze_gate(tmp_path, monkeypatch):
+    from repro.launch import serve as launch_serve
+
+    def run(*argv):
+        monkeypatch.setattr(
+            "sys.argv", ["python -m repro.launch.serve", *argv]
+        )
+        return launch_serve.main()
+
+    # the committed acceptance trace passes the static gate
+    assert run(
+        "--arch", ARCH, "--smoke", "--slots", "2", "--max-len", "64",
+        "--block-size", "8", "--chunk", "8",
+        "--trace-file", TRACE_PATH, "--analyze", "--synthetic-db",
+    ) == 0
+
+    # a tampered serialized plan is rejected before any device work
+    good = str(tmp_path / "good.json")
+    bad = str(tmp_path / "bad.json")
+    _plan().save(good)
+    _tamper_r002_double_free(_plan()).save(bad)
+    assert run("--analyze-plan", good) == 0
+    with pytest.raises(PlanVerificationError) as ei:
+        run("--analyze-plan", bad)
+    assert "R002" in str(ei.value)
