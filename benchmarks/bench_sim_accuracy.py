@@ -204,6 +204,78 @@ def coverage_rows() -> list[dict]:
     return rows
 
 
+def overlap_rows() -> list[dict]:
+    """Overlap/contention accuracy pins (ISSUE 9 tentpole, both sides).
+
+    ``overlap_bucketed_speedup``: the DES makespan ratio of the monolithic
+    gradient all-reduce plan vs the same plan with
+    ``Strategy(overlap_buckets=4)`` — bucketed reverse-topological launches
+    must keep beating the single tail-of-backward collective (pure
+    estimator arithmetic, bit-deterministic).
+
+    ``overlap_sim_err_{serialized,contention}_us``: a two-stream concurrent
+    collective scenario whose ground truth comes from the synthetic
+    contention calibration (``t_k = t_1 * (1 + c (k-1))``, exact
+    arithmetic).  The serialized DES prices the streams as free overlap and
+    misses by ``t_1 * c``; the DES with the contention model fitted back
+    from that same grid recovers the truth to float precision.  Any growth
+    in the contention row means the fit or the shared-fabric DES drifted.
+    """
+    from repro.configs.base import get_config
+    from repro.core.autotuner import layer_cost_from_config
+    from repro.core.database import ProfileDB
+    from repro.core.estimator import OpTimeEstimator
+    from repro.core.graph import DataflowGraph
+    from repro.core.hardware import TPU_V5E
+    from repro.core.simulator import simulate
+    from repro.core.strategy import Strategy, pipeline_graph
+    from repro.netprof.model import fit_link_contention
+    from repro.netprof.sweep import synthetic_contention_calibration
+
+    rows = []
+    cfg = get_config("llama3.2-1b")
+    cost = layer_cost_from_config(cfg, 1, 256, 1)
+    est = OpTimeEstimator(TPU_V5E)
+
+    def makespan(ob: int) -> float:
+        g = pipeline_graph(
+            cfg.num_layers, cost,
+            Strategy(dp=4, pp=2, vstages=4, schedule="interleaved_1f1b",
+                     microbatches=4, compression="int8", overlap_buckets=ob),
+        )
+        return simulate(g, est.duration).makespan
+
+    mono, bucketed = makespan(0), makespan(4)
+    rows.append(
+        {"name": "overlap_bucketed_speedup", "value": mono / bucketed,
+         "tol_rel": 0.0, "tol_abs": 0.0,
+         "derived": (f"mono_us={mono * 1e6:.1f};"
+                     f"bucketed_us={bucketed * 1e6:.1f};buckets=4")}
+    )
+
+    c_true, t1 = 0.6, 1e-3
+    db = ProfileDB()
+    synthetic_contention_calibration(db, "tpu_v5e", c=c_true)
+    cm = fit_link_contention(db, "tpu_v5e")
+    g = DataflowGraph()
+    g.add("arA", "all-reduce", device="link:dp0")
+    g.add("arB", "all-reduce", device="link:dp1")
+    truth = t1 * (1.0 + c_true)
+    ser = simulate(g, lambda n: t1).makespan
+    con = simulate(g, lambda n: t1, contention=cm).makespan
+    derived = f"truth_us={truth * 1e6:.1f};c={cm.c:.3f}"
+    rows += [
+        {"name": "overlap_sim_err_serialized_us",
+         "value": abs(ser - truth) * 1e6,
+         # the serialized miss is exactly t1*c modulo fit rounding
+         "tol_rel": 0.0, "tol_abs": 0.5, "derived": derived},
+        {"name": "overlap_sim_err_contention_us",
+         "value": abs(con - truth) * 1e6,
+         "tol_rel": 0.0, "tol_abs": 0.5, "derived": derived},
+    ]
+    return rows
+
+
 def run(steps: int = 12, profile_repeats: int = 5) -> list[dict]:
     import jax
 
@@ -306,5 +378,5 @@ if __name__ == "__main__":
     rows = schedule_rows() if args.smoke else run()
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
-    for r in serve_rows() + coverage_rows():
+    for r in serve_rows() + coverage_rows() + overlap_rows():
         print(f"{r['name']},{r['value']:.2f},{r['derived']}")

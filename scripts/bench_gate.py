@@ -60,8 +60,12 @@ def collect(smoke: bool) -> dict[str, dict]:
         }
     # serve rows: the DES serving twin pricing the committed acceptance
     # trace from the synthetic grid (bit-deterministic, zero tolerance),
-    # plus the coverage auditor's classification counts for the same trace
-    for r in bench_sim_accuracy.serve_rows() + bench_sim_accuracy.coverage_rows():
+    # plus the coverage auditor's classification counts for the same trace,
+    # plus the overlap/contention accuracy pins (bucketed-gradAR speedup
+    # and the concurrent-scenario sim error, contention vs serialized)
+    for r in (bench_sim_accuracy.serve_rows()
+              + bench_sim_accuracy.coverage_rows()
+              + bench_sim_accuracy.overlap_rows()):
         metrics[r["name"]] = {
             "value": float(r["value"]),
             "tol_rel": float(r.get("tol_rel", 0.0)),

@@ -53,6 +53,12 @@ def _parse() -> argparse.Namespace:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid (3 payloads, float32, 3 repeats) — the "
                          "CI calibration mode")
+    ap.add_argument("--concurrent", action="store_true",
+                    help="also run the concurrent-collective sweep (two "
+                         "streams sharing one fabric) and fit the "
+                         "link-contention model")
+    ap.add_argument("--streams", type=int, default=2,
+                    help="concurrent streams for --concurrent (default 2)")
     ap.add_argument("--verify", action="store_true",
                     help="no sweep: load --db and run the measured-vs-ring "
                          "acceptance simulation (exit 1 on any ring "
@@ -154,6 +160,20 @@ def main() -> int:
 
     db = ProfileDB.load_or_empty(args.db)
     n = sweep_collectives(db, platform=args.platform, config=cfg)
+    if args.concurrent:
+        from repro.netprof.model import fit_link_contention
+        from repro.netprof.sweep import sweep_concurrent
+
+        nc = sweep_concurrent(
+            db, platform=args.platform, config=cfg, streams=args.streams
+        )
+        print(f"[netprof] recorded {nc} concurrent-collective measurements")
+        cm = fit_link_contention(db, args.platform)
+        if cm is None:
+            print("[netprof] FAIL: concurrent sweep produced no fittable "
+                  "link-contention pairs")
+            return 1
+        print(f"[netprof] {cm.describe()}")
     db.save(args.db)
     print(f"[netprof] recorded {n} measurements -> {args.db}")
 

@@ -87,7 +87,10 @@ fi
 
 if [[ "${1:-}" == "netprof" ]]; then
     DB="${NETPROF_DB:-netprof_db.json}"
-    python scripts/calibrate_net.py --db "$DB" --force-host-devices 8 --smoke
+    # --concurrent also runs the two-stream shared-fabric sweep and fails
+    # unless a link-contention model fits from the pairs
+    python scripts/calibrate_net.py --db "$DB" --force-host-devices 8 \
+        --smoke --concurrent
     exec python scripts/calibrate_net.py --db "$DB" --verify
 fi
 

@@ -144,9 +144,19 @@ def analyze_training_plan(
         est = estimator
         if est is None:
             est = OpTimeEstimator(TPU_V5E)
-        res = simulate(graph, est.duration, record_events=True)
-        report.extend(audit_timeline(res, graph, name=report.name))
+        # price WITH the fitted link-contention model whenever the
+        # estimator carries one (netprof DB with a concurrent sweep), and
+        # tell the auditor a model was available: a timeline with T010
+        # overlap priced without an available model is a T011 warning
+        cm = getattr(est, "contention_model", None)
+        res = simulate(graph, est.duration, record_events=True, contention=cm)
+        report.extend(audit_timeline(
+            res, graph, name=report.name,
+            contention_available=cm is not None,
+        ))
         report.metrics["sim_makespan_s"] = res.makespan
+        if res.contention is not None:
+            report.metrics["sim_contention_applied"] = 1.0
     return report
 
 

@@ -44,6 +44,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from repro.analysis.diagnostics import Report
+from repro.pricing import PROV_ANALYTIC, PROV_DB, PROV_FIT, PROV_RING
 from repro.serve.policy import ServeConfig
 from repro.serve.trace import TraceRequest
 
@@ -53,11 +54,13 @@ CLASS_EXTRAP = "extrapolation"
 CLASS_FALLBACK = "fallback"
 
 # classification -> the time_provenance stamps the pricer may produce
+# (the canonical tags from repro.pricing — the classification-vs-stamp
+# parity is what makes this audit sound)
 CLASS_TO_PROVENANCE: dict[str, tuple[str, ...]] = {
-    CLASS_EXACT: ("measured-db",),
-    CLASS_INTERP: ("measured-fit",),
-    CLASS_EXTRAP: ("measured-fit",),
-    CLASS_FALLBACK: ("analytic", "ring"),
+    CLASS_EXACT: (PROV_DB,),
+    CLASS_INTERP: (PROV_FIT,),
+    CLASS_EXTRAP: (PROV_FIT,),
+    CLASS_FALLBACK: (PROV_ANALYTIC, PROV_RING),
 }
 
 

@@ -70,6 +70,8 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "T003": "event with negative, NaN, or infinite duration",
     "T004": "event extends beyond the reported makespan",
     "T010": "link streams concurrently busy (serialization-divergence audit)",
+    "T011": "timeline priced without the available link-contention model "
+            "despite nonzero link overlap (silent serialized pricing)",
     # -- serve-plan resource ledger (repro.analysis.serve_checks) -----------
     "R001": "KV block leak: a block allocated to a request is never freed",
     "R002": "KV block double-free, or free of a block the request never "

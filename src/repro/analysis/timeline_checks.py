@@ -144,11 +144,20 @@ def audit_timeline(
     result: SimResult,
     graph: Optional[DataflowGraph] = None,
     name: Optional[str] = None,
+    contention_available: bool = False,
 ) -> Report:
-    """T001-T004 invariants plus the T010 link-concurrency audit.
+    """T001-T004 invariants plus the T010/T011 link-concurrency audits.
 
     Needs a timeline simulated with ``record_events=True``; pass the
     simulated ``graph`` to enable the causality check (T002).
+
+    ``contention_available=True`` declares that the caller HAS a fitted
+    link-contention model (``estimator.contention_model``); a timeline that
+    then shows nonzero T010 overlap while ``result.contention`` is unset
+    was silently priced with the exact-serialization assumption the model
+    exists to correct, and draws a T011 warning (the timeline mirror of the
+    A003 no-silent-fallback rule).  With no model available, overlapped
+    serialized pricing is the only option and stays a T010 info.
     """
     report = Report(name or "timeline")
     by_device: dict[str, list] = {}
@@ -244,6 +253,19 @@ def audit_timeline(
             pairs=contention["pairs"],
             top_event_pairs=top,
         )
+        # T011 — silent serialized pricing: overlap is present AND a
+        # contention model was available, yet this timeline was simulated
+        # without it (SimResult.contention unset)
+        if contention_available and result.contention is None:
+            report.warning(
+                "T011",
+                f"{overlap_s:.6g}s of link overlap priced WITHOUT the "
+                "available link-contention model — pass "
+                "contention=estimator.contention_model to simulate() so "
+                "concurrent collectives are slowed by the fitted gamma(k) "
+                "instead of silently overlapping for free",
+                overlap_s=overlap_s,
+            )
     return report
 
 

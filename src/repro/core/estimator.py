@@ -234,12 +234,17 @@ class OpTimeEstimator:
         # the first serve-annotated node so non-serving estimators never
         # import the serve package
         self._serve_pricer = None
+        # link-contention model fitted from the concurrent-collective sweep
+        # (None without measurements: the DES keeps fully-parallel links)
+        self.contention_model = None
         self.dispatch_s = 0.0
         self.op_overhead_s = 0.0
         if db is not None:
+            from repro.netprof.model import fit_link_contention
             from repro.netprof.pricing import CollectivePricer
 
             self.collective_pricer = CollectivePricer(db, platform)
+            self.contention_model = fit_link_contention(db, platform.name)
             self.dispatch_s = float(
                 db.meta(platform.name).get("dispatch_s", 0.0)
             )
@@ -355,16 +360,18 @@ class OpTimeEstimator:
         curve -> analytic roofline on the node's flops/bytes.  The winning
         stage lands in ``node.meta["time_provenance"]`` (the serve audit's
         A004 gate requires every priced serve node to carry one)."""
-        from repro.netprof.pricing import PROV_ANALYTIC, PROV_DB
+        from repro.pricing import PROV_ANALYTIC, PROV_DB, PriceQuery
 
         if self.db is not None:
-            from repro.serve.cost import _XKEY, ServePricer
+            from repro.serve.cost import ServePricer
 
             if self._serve_pricer is None:
                 self._serve_pricer = ServePricer(self.db, self.platform.name)
-            res = self._serve_pricer.price(
-                sv["family"], sv["arch"],
-                int(sv[_XKEY[sv["family"]]]), int(sv["view"]),
+            res = self._serve_pricer.price_query(
+                PriceQuery.make(
+                    sv["family"],
+                    **{k: v for k, v in sv.items() if k != "family"},
+                )
             )
             if res is not None:
                 t, prov = res
@@ -380,7 +387,7 @@ class OpTimeEstimator:
         ring fallback (repro.netprof.pricing).  The winning stage is stamped
         into ``node.meta["time_provenance"]`` so timelines and launch
         reports can show measured-vs-ring per node."""
-        from repro.netprof.pricing import PROV_DB, PROV_FIT, PROV_NOOP, PROV_RING
+        from repro.pricing import PROV_DB, PROV_FIT, PROV_NOOP, PROV_RING, PriceQuery
 
         link = self.platform.link_for(node.link_kind)
         nbytes = (
@@ -389,8 +396,13 @@ class OpTimeEstimator:
             else node.comm_bytes
         )
         if self.collective_pricer is not None:
-            t, prov = self.collective_pricer.price(
-                node.kind, nbytes, node.group_size, link
+            t, prov = self.collective_pricer.price_query(
+                PriceQuery.make(
+                    node.kind,
+                    nbytes=nbytes,
+                    group=node.group_size,
+                    link_kind=node.link_kind or "ici",
+                )
             )
             node.meta["time_provenance"] = prov
             if prov == PROV_DB:

@@ -43,6 +43,11 @@ class Strategy:
     # "int8" (numerics executable via repro.dist.compress.compressed_psum),
     # or "topk:<frac>" (byte-accounting only — see compressed_allreduce_bytes)
     compression: str = "none"
+    # >= 2: split each stage's dp gradient all-reduce into this many
+    # reverse-topological buckets launched as backward finishes their
+    # virtual stages (executable twin: repro.dist.compress.compressed_psum
+    # with buckets / bucketed_pmean).  0/1 = one all-reduce per stage.
+    overlap_buckets: int = 0
 
     @property
     def chips(self) -> int:
@@ -50,6 +55,8 @@ class Strategy:
 
     def describe(self) -> str:
         tag = "" if self.compression == "none" else f",{self.compression}"
+        if self.overlap_buckets >= 2:
+            tag += f",ob{self.overlap_buckets}"
         sched = self.schedule + (f"v{self.vstages}" if self.vstages > 1 else "")
         return (
             f"dp{self.dp}xtp{self.tp}xpp{self.pp}"
@@ -260,14 +267,103 @@ def pipeline_graph(
                 s_bytes = grad_bytes_per_stage[s]
             if grad_meta_per_stage is not None:
                 s_meta = dict(grad_meta_per_stage[s])
-            b.add(
-                f"gradAR{s}", "all-reduce",
-                [f"B{k}.{m}" for k in range(s, V, S) for m in range(M)],
-                comm_bytes=s_bytes, group_size=strategy.dp,
-                link_kind="ici", device=f"link:dp{s}",
-                meta=s_meta,
+            ks = list(range(s, V, S))
+            specs = _grad_bucket_specs(
+                s_bytes, s_meta, ks, strategy.overlap_buckets
             )
+            if specs is None:
+                b.add(
+                    f"gradAR{s}", "all-reduce",
+                    [f"B{k}.{m}" for k in ks for m in range(M)],
+                    comm_bytes=s_bytes, group_size=strategy.dp,
+                    link_kind="ici", device=f"link:dp{s}",
+                    meta=s_meta,
+                )
+            else:
+                # bucketed overlap: gradAR{s}.{bkt} depends only on the B
+                # steps of its own virtual-stage group, so the first
+                # (deepest-chunk) buckets launch while earlier chunks are
+                # still in backward; all buckets stay on link:dp{s}
+                # (same-link FIFO), the win is the earlier launch
+                for bkt, (group, g_bytes, g_meta) in enumerate(specs):
+                    b.add(
+                        f"gradAR{s}.{bkt}", "all-reduce",
+                        [f"B{k}.{m}" for k in group for m in range(M)],
+                        comm_bytes=g_bytes, group_size=strategy.dp,
+                        link_kind="ici", device=f"link:dp{s}",
+                        meta=g_meta,
+                    )
     return b.build()
+
+
+def _grad_bucket_specs(
+    s_bytes: float, s_meta: dict, ks: list[int], n_buckets: int
+) -> Optional[list[tuple[list[int], float, dict]]]:
+    """Split one stage's gradient all-reduce into reverse-topological buckets.
+
+    Returns ``[(vstage_group, raw_bytes, meta), ...]`` in launch order —
+    the group of the *deepest* virtual stages first, since backward
+    finishes their gradients first — or None when bucketing is off or the
+    stage has a single virtual stage (splitting one chunk's all-reduce
+    only adds per-collective latency, no earlier launch).
+
+    Accounting is exact by construction: raw f32 bytes partition to
+    ``s_bytes`` (remainder pinned to the first bucket) and the per-leaf
+    compression annotation partitions leaf-for-leaf (leaves are
+    layer-major, so a vstage group owns a contiguous proportional slice),
+    keeping ``sum(priced buckets) == priced whole`` for every scheme —
+    the graph twin of ``repro.dist.compress.bucket_allreduce_bytes``.
+    """
+    if n_buckets < 2 or len(ks) < 2:
+        return None
+    nb = min(n_buckets, len(ks))
+    ks_desc = sorted(ks, reverse=True)
+    groups = [
+        ks_desc[i * len(ks_desc) // nb:(i + 1) * len(ks_desc) // nb]
+        for i in range(nb)
+    ]
+
+    leaves = None
+    if s_meta.get("grad_leaf_elems"):
+        leaves = [int(n) for n in s_meta["grad_leaf_elems"]]
+    elif s_meta.get("n_tensors"):
+        n, t = int(s_meta["grad_elems"]), int(s_meta["n_tensors"])
+        leaves = [n // t + (1 if i < n % t else 0) for i in range(t)]
+
+    out: list[tuple[list[int], float, dict]] = []
+    if leaves is None:
+        # no compression annotation: split raw bytes by chunk count
+        raw = [s_bytes * len(g) / len(ks) for g in groups]
+        raw[0] += s_bytes - sum(raw)
+        return [(g, r, {}) for g, r in zip(groups, raw)]
+
+    # leaves are layer-major (ascending vstage); group gi, holding the
+    # descending-order chunks [lo_idx, hi_idx) of ks_desc, owns the
+    # mirrored tail slice of the leaf list
+    L = len(leaves)
+    raw: list[float] = []
+    slices: list[list[int]] = []
+    for gi, group in enumerate(groups):
+        lo_idx = sum(len(groups[j]) for j in range(gi))
+        hi_idx = lo_idx + len(group)
+        a = round(L * (len(ks) - hi_idx) / len(ks))
+        z = round(L * (len(ks) - lo_idx) / len(ks))
+        sl = leaves[a:z]
+        if not sl:
+            # fewer leaves than chunks (degenerate rounding): bucketing
+            # would emit an empty all-reduce — keep the single node
+            return None
+        slices.append(sl)
+        raw.append(4.0 * sum(sl))
+    raw[0] += s_bytes - sum(raw)
+    for group, r, sl in zip(groups, raw, slices):
+        g_meta = dict(s_meta)
+        g_meta["grad_elems"] = int(sum(sl))
+        g_meta["n_tensors"] = len(sl)
+        if s_meta.get("grad_leaf_elems"):
+            g_meta["grad_leaf_elems"] = sl
+        out.append((group, r, g_meta))
+    return out
 
 
 def model_pipeline_graph(

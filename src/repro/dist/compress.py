@@ -95,7 +95,40 @@ def init_feedback_state(tree, dp: int = 1):
     )
 
 
-def compressed_psum(grads, axis_name, state):
+def reverse_bucket_indices(
+    leaf_elems, n_buckets: int
+) -> list[list[int]]:
+    """Partition leaf indices into reverse-order buckets of ~equal elements.
+
+    The bucketing twin shared by the executor (:func:`compressed_psum` with
+    ``buckets``) and the simulator graph builder
+    (``repro.core.strategy.pipeline_graph``): leaves are taken in *reverse*
+    flatten order — the leaves backward produces last come first, so bucket
+    0 is the one an overlapped executor can launch earliest — and greedily
+    grouped until each bucket holds ~``total / n_buckets`` elements.  Every
+    bucket is non-empty; fewer leaves than buckets degenerates to one
+    bucket per leaf.
+    """
+    elems = [int(n) for n in leaf_elems]
+    nb = max(1, min(int(n_buckets), len(elems)))
+    order = list(range(len(elems)))[::-1]
+    target = sum(elems) / nb
+    out: list[list[int]] = [[] for _ in range(nb)]
+    acc, b = 0, 0
+    for pos, i in enumerate(order):
+        remaining_leaves = len(order) - pos
+        if (
+            out[b]
+            and b < nb - 1
+            and (acc >= (b + 1) * target or remaining_leaves <= nb - 1 - b)
+        ):
+            b += 1
+        out[b].append(i)
+        acc += elems[i]
+    return out
+
+
+def compressed_psum(grads, axis_name, state, buckets: int = 0):
     """Mean-reduce a gradient pytree over ``axis_name`` with int8 payloads.
 
     Runs inside ``shard_map`` (or ``pmap``) with ``axis_name`` bound; with
@@ -108,6 +141,15 @@ def compressed_psum(grads, axis_name, state):
     int8 payloads are summed in f32 via ``psum``, and the mean is returned
     together with the per-device residual state for the next step.
 
+    ``buckets >= 2`` groups the per-leaf payloads into
+    :func:`reverse_bucket_indices` buckets and issues ONE psum per bucket
+    (concatenated flat payloads) instead of one per leaf — the DDP-style
+    bucketed all-reduce that lets the latency-hiding scheduler overlap
+    bucket i's reduction with the rest of the step.  ``psum`` is
+    elementwise, so the bucketed result is bit-identical to the per-leaf
+    path (asserted in tests); quantization and error feedback stay
+    per-leaf either way.
+
     Returns ``(mean_tree, new_state)``; pass ``state=None`` on the first
     step to start from zero residuals.
     """
@@ -117,18 +159,63 @@ def compressed_psum(grads, axis_name, state):
 
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     res_leaves = jax.tree_util.tree_leaves(state)
-    means, new_res = [], []
+    payloads, new_res = [], []
     for g, r in zip(leaves, res_leaves):
         q, scale, nr = compress_with_feedback(g, r)
-        total = dequantize_int8(q, scale)
-        if axis_name is not None:
-            total = jax.lax.psum(total, axis_name)
-        means.append(total / size)
+        payloads.append(dequantize_int8(q, scale))
         new_res.append(nr)
+    if axis_name is not None and buckets >= 2 and len(payloads) >= 2:
+        means: list = [None] * len(payloads)
+        for bucket in reverse_bucket_indices(
+            [p.size for p in payloads], buckets
+        ):
+            flat = jnp.concatenate([payloads[i].reshape(-1) for i in bucket])
+            red = jax.lax.psum(flat, axis_name)
+            off = 0
+            for i in bucket:
+                n = payloads[i].size
+                means[i] = (
+                    red[off:off + n].reshape(payloads[i].shape) / size
+                )
+                off += n
+    else:
+        means = []
+        for total in payloads:
+            if axis_name is not None:
+                total = jax.lax.psum(total, axis_name)
+            means.append(total / size)
     return (
         jax.tree_util.tree_unflatten(treedef, means),
         jax.tree_util.tree_unflatten(treedef, new_res),
     )
+
+
+def bucketed_pmean(tree, axis_name, buckets: int = 0):
+    """Dense counterpart of the bucketed path of :func:`compressed_psum`.
+
+    Mean-reduces a gradient pytree over ``axis_name`` with one psum per
+    reverse-order bucket instead of one pmean per leaf; bit-identical to
+    per-leaf pmean (psum is elementwise), fewer and earlier-launchable
+    collectives.  ``buckets < 2`` (or no axis) is the plain per-leaf pmean.
+    """
+    if axis_name is None:
+        return tree
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if buckets < 2 or len(leaves) < 2:
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis_name), tree
+        )
+    size = jax.lax.psum(1, axis_name)
+    means: list = [None] * len(leaves)
+    for bucket in reverse_bucket_indices([g.size for g in leaves], buckets):
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in bucket])
+        red = jax.lax.psum(flat, axis_name)
+        off = 0
+        for i in bucket:
+            n = leaves[i].size
+            means[i] = red[off:off + n].reshape(leaves[i].shape) / size
+            off += n
+    return jax.tree_util.tree_unflatten(treedef, means)
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +261,24 @@ def tree_allreduce_bytes(leaf_elems, scheme: str = "int8") -> float:
             for n in leaf_elems
         )
     )
+
+
+def bucket_allreduce_bytes(
+    leaf_elems, scheme: str = "int8", buckets: int = 2
+) -> list[float]:
+    """Per-bucket payloads of a bucketed compressed all-reduce.
+
+    One entry per :func:`reverse_bucket_indices` bucket (reverse-launch
+    order).  Per-leaf accounting is additive, so the entries sum exactly to
+    :func:`tree_allreduce_bytes` over the same leaves — splitting the
+    collective never changes the total wire volume, only when it ships
+    (asserted in tests/test_train_compressed.py).
+    """
+    elems = [int(n) for n in leaf_elems]
+    return [
+        tree_allreduce_bytes([elems[i] for i in bucket], scheme=scheme)
+        for bucket in reverse_bucket_indices(elems, buckets)
+    ]
 
 
 def leaf_elems(tree) -> list[int]:

@@ -223,6 +223,7 @@ def make_scheduled_body(
     first_fn=None,
     loss_fn=None,
     axis_name: str = "stage",
+    overlap: bool = False,
 ):
     """Compile a schedule into the per-device tick loop.
 
@@ -244,6 +245,15 @@ def make_scheduled_body(
       loss_fn: ``(last_params, y, loss_inputs_m) -> scalar`` contribution of
         one microbatch to the total loss, evaluated (and vjp-seeded) by the
         last virtual stage only.  Default ``0.5 * sum(y**2)``.
+      overlap: unroll the tick loop in Python and statically elide every
+        ppermute whose arrivals no device consumes this tick (the plan's
+        ``recv_*_valid`` row is all zero) — dead exchanges on warmup/drain
+        ticks never issue, so the remaining collectives interleave with
+        compute instead of fencing every tick.  Receives with
+        ``recv_*_valid == 0`` are masked out of the scatter either way, so
+        the result is bit-identical to ``overlap=False`` (asserted in
+        tests); the trade is trace size (O(ticks) switch bodies instead of
+        one scanned body).
 
     Inside the loop, ``loss``/``aux``/``outs`` and the first/last-stage
     parameter gradients are psum-replicated over ``axis_name``; block
@@ -301,21 +311,26 @@ def make_scheduled_body(
         aux = jnp.zeros((), jnp.float32)
         snd = jnp.zeros(mb_shape, mb_dtype)
 
-        def tick(carry, row):
+        def tick(carry, row, do_f=True, do_b=True):
             (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
              fwd_snd, bwd_snd) = carry
             # 1. exchange: every tick ships both registers; the static plan
-            # says whether this device's arrivals mean anything
-            inc_f = jax.lax.ppermute(fwd_snd, axis_name, perm_f)
-            inc_b = jax.lax.ppermute(bwd_snd, axis_name, perm_b)
-            rc, rm = row["rfc"][s], row["rfm"][s]
-            x_in = x_in.at[rc, rm].set(
-                jnp.where(row["rfv"][s] > 0, inc_f, x_in[rc, rm])
-            )
-            rc, rm = row["rbc"][s], row["rbm"][s]
-            g_in = g_in.at[rc, rm].set(
-                jnp.where(row["rbv"][s] > 0, inc_b, g_in[rc, rm])
-            )
+            # says whether this device's arrivals mean anything.  In
+            # overlap mode a direction nobody consumes this tick is elided
+            # statically (do_f/do_b) — the scatter below would mask it out
+            # anyway, so eliding is bit-exact
+            if do_f:
+                inc_f = jax.lax.ppermute(fwd_snd, axis_name, perm_f)
+                rc, rm = row["rfc"][s], row["rfm"][s]
+                x_in = x_in.at[rc, rm].set(
+                    jnp.where(row["rfv"][s] > 0, inc_f, x_in[rc, rm])
+                )
+            if do_b:
+                inc_b = jax.lax.ppermute(bwd_snd, axis_name, perm_b)
+                rc, rm = row["rbc"][s], row["rbm"][s]
+                g_in = g_in.at[rc, rm].set(
+                    jnp.where(row["rbv"][s] > 0, inc_b, g_in[rc, rm])
+                )
 
             # 2. execute this device's scheduled step
             c, m = row["chunk"][s], row["mb"][s]
@@ -415,17 +430,27 @@ def make_scheduled_body(
                         loss + lval, aux, fwd_snd,
                         jnp.zeros(mb_shape, mb_dtype))
 
-            carry = jax.lax.switch(
+            return jax.lax.switch(
                 row["act"][s],
                 (do_noop, do_fwd, do_fwd_first, do_bwd, do_bwd_last,
                  do_bwd_first, do_bwd_first_last),
                 op,
             )
-            return carry, None
 
         carry = (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux,
                  snd, snd)
-        carry, _ = jax.lax.scan(tick, carry, rows)
+        if overlap:
+            for t in range(plan.n_ticks):
+                row_t = {k: v[t] for k, v in rows.items()}
+                carry = tick(
+                    carry, row_t,
+                    do_f=any(plan.recv_fwd_valid[t]),
+                    do_b=any(plan.recv_bwd_valid[t]),
+                )
+        else:
+            carry, _ = jax.lax.scan(
+                lambda c, r: (tick(c, r), None), carry, rows
+            )
         (x_in, g_in, outs, gblocks, gfirst, glast, loss, aux, _f, _b) = carry
 
         # loss/outs are real only on the device owning the last virtual

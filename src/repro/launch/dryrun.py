@@ -229,7 +229,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, cfg=None):
 
 
 def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
-             cfg=None, tag: str = "") -> dict:
+             cfg=None, tag: str = "", run_spec=None) -> dict:
     multi_pod = mesh_name == "multi"
     cfg = cfg or get_config(arch)
     shape = SHAPES[shape_name]
@@ -239,6 +239,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
         "chips": 512 if multi_pod else 256, "status": "",
         "variant": tag or "baseline",
     }
+    if run_spec is not None:
+        rec["run_spec"] = run_spec.to_dict()
     suffix = f"__{tag}" if tag else ""
     path = os.path.join(
         out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
@@ -316,16 +318,19 @@ def _write(path: str, rec: dict) -> None:
 
 
 def main() -> None:
+    from repro.launch import spec as runspec
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    # shared launch surface (repro.launch.spec): --arch/--smoke/--seed plus
+    # the dryrun cell selectors --shape/--mesh
+    runspec.add_args(ap, "model", "dryrun")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--cells-from", default=None,
                     help="file with one 'arch|shape|mesh' per line")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
+    spec = runspec.from_args(args)
 
     cells: list[tuple[str, str, str]] = []
     meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
@@ -352,7 +357,7 @@ def main() -> None:
             print(f"[skip existing] {a} {s} {m}", flush=True)
             continue
         t0 = time.time()
-        rec = run_cell(a, s, m, args.out)
+        rec = run_cell(a, s, m, args.out, run_spec=spec)
         dt = time.time() - t0
         msg = rec["status"]
         if msg == "ok":

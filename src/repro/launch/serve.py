@@ -30,7 +30,9 @@ Modes (composable):
 
 ``--force-host-devices N`` (with ``--shard``) forces N XLA host devices
 and slot-shards the decode batch — it must be handled before JAX imports,
-so all repro imports are deferred into main() (calibrate_net.py idiom).
+so repro imports (including the shared ``repro.launch.spec`` flag
+declarations, which transitively import jax via compat) happen only after
+:func:`_force_host_devices_early` has scanned argv (calibrate_net.py idiom).
 """
 from __future__ import annotations
 
@@ -39,16 +41,29 @@ import os
 import sys
 
 
+def _force_host_devices_early() -> None:
+    """Apply --force-host-devices to XLA_FLAGS before any jax import."""
+    argv = sys.argv[1:]
+    n = 0
+    for i, a in enumerate(argv):
+        if a == "--force-host-devices" and i + 1 < len(argv):
+            n = int(argv[i + 1])
+        elif a.startswith("--force-host-devices="):
+            n = int(a.split("=", 1)[1])
+    if n > 0:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
 def _parse() -> argparse.Namespace:
+    from repro.launch import spec as runspec
+
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced config of the same family (CPU-sized)")
-    # engine shape
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--block-size", type=int, default=16)
-    ap.add_argument("--chunk", type=int, default=32)
+    # shared launch surface (repro.launch.spec): --arch/--smoke/--seed and
+    # the engine shape --slots/--max-len/--block-size/--chunk
+    runspec.add_args(ap, "model", "serve")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id for engine early exit (-1: none; "
                          "parity runs must leave this unset — the twin "
@@ -70,7 +85,6 @@ def _parse() -> argparse.Namespace:
     ap.add_argument("--burst-gap", type=float, default=0.2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
     # modes
     ap.add_argument("--simulate", action="store_true",
                     help="DES twin only: price the trace, no model runs")
@@ -192,23 +206,20 @@ def _run_engine(args, cfg, scfg, trace):
 
 
 def main() -> int:
+    _force_host_devices_early()
     args = _parse()
-    if args.force_host_devices > 0:
-        flags = os.environ.get("XLA_FLAGS", "")
-        os.environ["XLA_FLAGS"] = (
-            f"{flags} --xla_force_host_platform_device_count="
-            f"{args.force_host_devices}"
-        ).strip()
 
     from repro.configs.base import get_config, smoke_variant
+    from repro.launch import spec as runspec
     from repro.serve.policy import ServeConfig
 
-    cfg = get_config(args.arch)
-    if args.smoke:
+    spec = runspec.from_args(args)
+    cfg = get_config(spec.arch)
+    if spec.smoke:
         cfg = smoke_variant(cfg)
     scfg = ServeConfig(
-        slots=args.slots, max_len=args.max_len,
-        block_size=args.block_size, chunk=args.chunk,
+        slots=spec.slots, max_len=spec.max_len,
+        block_size=spec.block_size, chunk=spec.chunk,
     )
 
     if args.analyze_plan:
@@ -216,6 +227,7 @@ def main() -> int:
 
         plan = ServePlan.load(args.analyze_plan)
         report = check_serve_plan(plan, name=f"plan:{args.analyze_plan}")
+        runspec.attach(report, spec)
         for line in report.summary_lines():
             print(f"[analyze] {line}")
         if args.analyze_report:
@@ -270,6 +282,7 @@ def main() -> int:
             db=_serve_db(args, cfg, scfg),
             db_path=args.db or "<synthetic>",
         )
+        runspec.attach(report, spec)
         for line in report.summary_lines():
             print(f"[analyze] {line}")
         if args.analyze_report:
@@ -317,7 +330,8 @@ def main() -> int:
                 from repro.serve.report import save_report
 
                 save_report(args.report, {"sim_latency": sim_res.latency,
-                                          "provenance": prov})
+                                          "provenance": prov,
+                                          "run_spec": spec.to_dict()})
                 print(f"[serve] wrote {args.report}")
             return 0
 
@@ -336,7 +350,8 @@ def main() -> int:
 
     if not args.parity:
         if args.report:
-            save_report(args.report, {"engine_latency": eng_latency})
+            save_report(args.report, {"engine_latency": eng_latency,
+                                      "run_spec": spec.to_dict()})
             print(f"[serve] wrote {args.report}")
         return 0
 
@@ -349,6 +364,7 @@ def main() -> int:
         sim_latency=sim_res.latency if sim_res else None,
         tol_rel=args.tol_rel,
     )
+    report["run_spec"] = spec.to_dict()
     print(render_parity(report))
     if args.report:
         save_report(args.report, report)

@@ -25,6 +25,7 @@ from repro.compat import AxisType, make_mesh
 from repro.configs.base import ShapeConfig, get_config, smoke_variant
 from repro.data import make_train_iterator
 from repro.ft import HeartbeatMonitor, StepTimeMonitor, StragglerPolicy
+from repro.launch import spec as runspec
 from repro.models import build_model
 from repro.models.sharding import data_axis_size, make_ctx, use_sharding
 from repro.optim import cosine_with_warmup, make_optimizer
@@ -146,7 +147,7 @@ def netprof_estimator(db_path: str, log_fn=print):
 
 def plan_analysis_report(
     cfg, strategy, *, micro_batch: int, seq: int, estimator=None,
-    log_fn=print,
+    run_spec=None, log_fn=print,
 ):
     """Statically verify the launch plan before a single step executes.
 
@@ -164,6 +165,7 @@ def plan_analysis_report(
         cfg, strategy, micro_batch=micro_batch, seq=seq,
         estimator=estimator, use_model_graph=True,
     )
+    runspec.attach(report, run_spec)
     for line in report.summary_lines():
         log_fn(f"[analyze] {line}")
     report.raise_on_errors()
@@ -295,8 +297,11 @@ def train(
     pp_schedule: str = "1f1b",
     vstages: int = 1,
     microbatches: int = 0,
+    overlap_buckets: int = 0,
+    overlap_comm: bool = False,
     netprof_db: str | None = None,
     analyze: bool = False,
+    run_spec=None,
     log_every: int = 10,
     ckpt_every: int = 50,
     host_id: int = 0,
@@ -335,9 +340,10 @@ def train(
                 schedule=pp_schedule if pipeline_on else "1f1b",
                 vstages=vstages if pipeline_on else 1,
                 compression=compression,
+                overlap_buckets=overlap_buckets,
             ),
             micro_batch=max(batch // (dp * grad_accum * mb_count), 1),
-            seq=seq, estimator=est, log_fn=log_fn,
+            seq=seq, estimator=est, run_spec=run_spec, log_fn=log_fn,
         )
     ctx = make_ctx(mesh, overrides=cfg.sharding_overrides)
     model = build_model(cfg)
@@ -352,7 +358,14 @@ def train(
         model, opt, sched, mesh,
         grad_accum=grad_accum, compression=compression,
         pipeline=plan,
+        overlap_buckets=overlap_buckets, overlap_comm=overlap_comm,
     )
+    if overlap_buckets >= 2 or overlap_comm:
+        log_fn(
+            f"[overlap] bucketed grad all-reduce x{overlap_buckets}"
+            f"{', unrolled pipeline comm' if overlap_comm else ''} "
+            f"(bit-exact rewrites; repro.dist)"
+        )
     if plan is not None:
         micro_bs = batch // (dp * grad_accum * plan.microbatches)
         log_fn(
@@ -436,19 +449,10 @@ def train(
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced config (CPU-friendly)")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=8)
+    # shared launch surface lives in repro.launch.spec (one declaration,
+    # every driver); only truly train-local knobs are declared here
+    runspec.add_args(ap, "model", "train")
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--grad-accum", type=int, default=1)
-    ap.add_argument("--compression", choices=["none", "int8"], default="none",
-                    help="compressed data-parallel gradients: int8 "
-                         "quantize->psum->dequantize with error-feedback "
-                         "residuals carried in TrainState.comp_state "
-                         "(repro.dist.compress; checkpoint format v2)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--no-restore", action="store_true")
     ap.add_argument("--d-model", type=int, default=0,
@@ -457,35 +461,11 @@ def main() -> None:
     ap.add_argument("--moe-impl", choices=["einsum", "ep_a2a"], default=None,
                     help="MoE execution strategy (ep_a2a = explicit "
                          "all-to-all expert parallelism, repro.dist.ep_a2a)")
-    ap.add_argument("--pp", type=int, default=1,
-                    help="pipeline stages: simulate the schedule AND run "
-                         "the real model through the scheduled pipeline "
-                         "executor on a (data, stage) mesh "
-                         "(repro.models.pipeline; needs device_count % pp "
-                         "== 0)")
-    ap.add_argument("--pp-schedule", default="1f1b",
-                    choices=["gpipe", "1f1b", "interleaved_1f1b"],
-                    help="pipeline schedule (repro.dist.schedules)")
-    ap.add_argument("--vstages", type=int, default=1,
-                    help="virtual stages per device (interleaved_1f1b)")
-    ap.add_argument("--microbatches", type=int, default=0,
-                    help="pipeline microbatches for the schedule plan "
-                         "(default: --pp)")
-    ap.add_argument("--netprof-db", default=None,
-                    help="calibrated interconnect ProfileDB "
-                         "(scripts/calibrate_net.py): launch-time "
-                         "simulations price collectives from this host's "
-                         "measurements instead of the ring model, with "
-                         "per-collective provenance in the plan report "
-                         "(repro.netprof; docs/netprof.md)")
-    ap.add_argument("--analyze", action="store_true",
-                    help="statically verify the plan (repro.analysis) "
-                         "before executing; abort on any error-level "
-                         "finding (docs/analysis.md)")
     args = ap.parse_args()
+    spec = runspec.from_args(args)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
+    cfg = get_config(spec.arch)
+    if spec.smoke:
         cfg = smoke_variant(cfg)
     if args.moe_impl and cfg.moe is not None:
         cfg = dataclasses.replace(
@@ -498,33 +478,38 @@ def main() -> None:
         )
     if args.layers:
         cfg = dataclasses.replace(cfg, num_layers=args.layers)
-    if args.pp > 1 or args.vstages > 1:
+    pipeline_on = spec.pp > 1 or spec.vstages > 1
+    if pipeline_on:
         pipeline_plan_report(
             cfg,
-            pp=args.pp,
-            schedule=args.pp_schedule,
-            vstages=args.vstages,
-            microbatches=args.microbatches or max(args.pp, 1),
-            batch=args.batch,
-            seq=args.seq,
-            netprof_db=args.netprof_db,
+            pp=spec.pp,
+            schedule=spec.pp_schedule,
+            vstages=spec.vstages,
+            microbatches=spec.microbatches or max(spec.pp, 1),
+            batch=spec.batch,
+            seq=spec.seq,
+            netprof_db=spec.netprof_db or None,
         )
     train(
         cfg,
-        steps=args.steps,
-        seq=args.seq,
-        batch=args.batch,
+        steps=spec.steps,
+        seq=spec.seq,
+        batch=spec.batch,
         lr=args.lr,
-        grad_accum=args.grad_accum,
-        compression=args.compression,
-        pp=args.pp if (args.pp > 1 or args.vstages > 1) else 0,
-        pp_schedule=args.pp_schedule,
-        vstages=args.vstages,
-        microbatches=args.microbatches,
-        netprof_db=args.netprof_db,
-        analyze=args.analyze,
+        grad_accum=spec.grad_accum,
+        compression=spec.compression,
+        pp=spec.pp if pipeline_on else 0,
+        pp_schedule=spec.pp_schedule,
+        vstages=spec.vstages,
+        microbatches=spec.microbatches,
+        overlap_buckets=spec.overlap_buckets,
+        overlap_comm=spec.overlap_comm,
+        netprof_db=spec.netprof_db or None,
+        analyze=spec.analyze,
+        run_spec=spec,
         ckpt_dir=args.ckpt_dir,
         restore_from=not args.no_restore,
+        seed=spec.seed,
     )
 
 

@@ -188,3 +188,84 @@ def fit_collective_models(
         if m is not None:
             out[kind] = m
     return out
+
+
+# ---------------------------------------------------------------------------
+# Link contention: what concurrent collectives cost on a shared fabric
+# ---------------------------------------------------------------------------
+
+# ProfileDB family of the concurrent-collective sweep: entries keyed
+# {"kind", "per_device_bytes", "devices", "streams"} where streams=1 is the
+# solo baseline and streams=k the wall time with k collectives in flight
+CONTENTION_FAMILY = "link-contention"
+
+
+@dataclass(frozen=True)
+class LinkContentionModel:
+    """Fitted slowdown of collectives sharing one fabric.
+
+    The DES serializes same-link collectives and runs distinct link
+    streams fully in parallel; real hosts share the fabric, so ``k``
+    concurrent collectives each slow down.  The model is the linear
+    shared-channel law ``gamma(k) = 1 + c * (k - 1)``: each stream's
+    progress rate drops to ``1/gamma(k)`` while ``k`` streams are active.
+    ``c = 0`` is a perfectly parallel fabric (today's DES across links);
+    ``c = 1`` is full serialization (``k`` streams take ``k``x as long —
+    what a single shared channel gives you, and what a forced-CPU host
+    measures).  ``c`` is fitted as the median of
+    ``(t_k / t_1 - 1) / (k - 1)`` over the concurrent-sweep pairs.
+    """
+
+    platform: str
+    c: float
+    samples: int
+
+    def gamma(self, streams: int) -> float:
+        if streams <= 1:
+            return 1.0
+        return 1.0 + self.c * (streams - 1)
+
+    def describe(self) -> str:
+        return (
+            f"link-contention[{self.platform}]: gamma(k)=1+{self.c:.3f}(k-1)"
+            f" ({self.samples} pairs)"
+        )
+
+
+def fit_link_contention(
+    db: ProfileDB, platform: str
+) -> Optional[LinkContentionModel]:
+    """Fit the contention factor from the concurrent-collective sweep.
+
+    Returns None when the DB holds no ``link-contention`` entries — the
+    simulator then keeps its classic fully-parallel link streams (and the
+    T011 audit stays quiet: without measurements, serialization-divergence
+    is an unknown, not a silent omission).
+    """
+    solo: dict[tuple, float] = {}
+    conc: list[tuple[tuple, int, float]] = []
+    for e in db.entries(platform, CONTENTION_FAMILY):
+        key = (
+            e.args.get("kind"),
+            int(e.args.get("per_device_bytes", 0)),
+            int(e.args.get("devices", 0)),
+        )
+        streams = int(e.args.get("streams", 1))
+        if e.mean_s <= 0.0:
+            continue
+        if streams <= 1:
+            solo[key] = float(e.mean_s)
+        else:
+            conc.append((key, streams, float(e.mean_s)))
+    ratios = []
+    for key, streams, t in conc:
+        base = solo.get(key)
+        if base is None or base <= 0.0:
+            continue
+        ratios.append(max((t / base - 1.0) / (streams - 1), 0.0))
+    if not ratios:
+        return None
+    # clamp at full serialization: gamma(k) <= k keeps the contended DES
+    # no more pessimistic than serializing the same intervals
+    c = float(min(np.median(np.asarray(ratios)), 1.0))
+    return LinkContentionModel(platform=platform, c=c, samples=len(ratios))

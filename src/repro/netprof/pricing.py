@@ -17,12 +17,18 @@ from repro.core.database import ProfileDB
 from repro.core.hardware import LinkSpec, PlatformSpec, collective_time
 from repro.netprof.model import COLLECTIVES, CollectiveModel, fit_collective_models
 
-# provenance tags, most-measured first
-PROV_DB = "measured-db"       # exact (payload, group) measurement
-PROV_FIT = "measured-fit"     # fitted CollectiveModel interpolation
-PROV_RING = "ring"            # analytic spec-sheet fallback
-PROV_NOOP = "noop"            # group <= 1: no collective happens
-PROV_ANALYTIC = "analytic"    # roofline on node features (serve fallback)
+# provenance tags: canonical definitions live in repro.pricing (the unified
+# Pricer protocol); re-exported here because this was their original home
+# and most call sites import them from repro.netprof.pricing
+from repro.pricing import (  # noqa: F401  (re-exports)
+    PROV_ANALYTIC,
+    PROV_DB,
+    PROV_FIT,
+    PROV_NOOP,
+    PROV_RING,
+    Ledger,
+    PriceQuery,
+)
 
 
 class CollectivePricer:
@@ -54,8 +60,11 @@ class CollectivePricer:
                         float(e.mean_s)
                     )
         self._exact = {k: float(np.mean(v)) for k, v in acc.items()}
-        # per-kind provenance ledger, filled as nodes are priced
-        self.stats: dict[str, dict[str, int]] = {}
+        # per-kind provenance ledger (repro.pricing.Ledger), filled as
+        # nodes are priced; ``stats`` stays the raw dict existing reports
+        # and tests read
+        self.ledger = Ledger(zero_provs=(PROV_DB, PROV_FIT, PROV_RING))
+        self.stats = self.ledger.stats
 
     # -- queries --------------------------------------------------------------
 
@@ -75,11 +84,24 @@ class CollectivePricer:
         if group <= 1:
             return 0.0, PROV_NOOP
         t, prov = self._resolve(kind, nbytes, group, link)
-        ledger = self.stats.setdefault(
-            kind, {PROV_DB: 0, PROV_FIT: 0, PROV_RING: 0}
-        )
-        ledger[prov] += 1
+        self.ledger.count(kind, prov)
         return t, prov
+
+    def price_query(self, query: PriceQuery) -> tuple[float, str]:
+        """The unified :class:`repro.pricing.Pricer` entry point.
+
+        ``query.args``: ``nbytes`` (effective wire payload after the
+        dist-layer annotations are resolved), ``group``, and optionally
+        ``link_kind`` (default ``"ici"``) resolved against the pricer's
+        platform.
+        """
+        link = self.platform.link_for(query.get("link_kind") or "ici")
+        return self.price(
+            query.kind,
+            float(query.get("nbytes", 0.0)),
+            int(query.get("group", 1)),
+            link,
+        )
 
     def _resolve(
         self, kind: str, nbytes: float, group: int, link: LinkSpec

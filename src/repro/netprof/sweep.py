@@ -28,7 +28,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.database import ProfileDB, ProfileEntry
-from repro.netprof.model import COLLECTIVES
+from repro.netprof.model import COLLECTIVES, CONTENTION_FAMILY, latency_steps
 
 DEFAULT_PAYLOADS = tuple(2**p for p in range(12, 23, 2))  # 4 KiB .. 4 MiB
 SMOKE_PAYLOADS = (2**12, 2**14, 2**16)
@@ -243,6 +243,184 @@ def sweep_collectives(
 
 def _collective_entry_count(db: ProfileDB, platform: str) -> int:
     return sum(len(db.entries(platform, kind)) for kind in COLLECTIVES)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-collective sweep: two streams active on one link at once
+# ---------------------------------------------------------------------------
+
+
+def _contention_entry(
+    kind: str, payload: int, group: int, streams: int,
+    mean: float, std: float, repeats: int,
+) -> ProfileEntry:
+    return ProfileEntry(
+        args={
+            "kind": kind,
+            "per_device_bytes": int(payload),
+            "devices": int(group),
+            "streams": int(streams),
+        },
+        mean_s=mean,
+        std_s=std,
+        n=repeats,
+        flops=0.0,
+        bytes=float(payload * streams),
+    )
+
+
+def _measure_concurrent(
+    mesh, plan: MeshPlan, axis: str, kind: str,
+    payload_bytes: int, streams: int, repeats: int,
+) -> Optional[tuple[float, float]]:
+    """Wall time (median, std) of ``streams`` independent collectives of
+    ``kind`` issued in one jitted program over the same mesh axis — the
+    same links, concurrently in flight."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.profiler import time_callable_samples
+
+    group = plan.shape[plan.names.index(axis)]
+    itemsize = _DTYPES["float32"]
+    per_elems = _shard_elems(payload_bytes, group, itemsize)
+    spec = P(*plan.names)
+    xs = tuple(
+        jax.device_put(
+            jnp.full(plan.shape + (per_elems,), float(i + 1), jnp.float32),
+            NamedSharding(mesh, spec),
+        )
+        for i in range(streams)
+    )
+    coll = _collective_fn(kind, axis, group)
+
+    def body(*vs):
+        return tuple(coll(v) for v in vs)
+
+    f = jax.jit(
+        shard_map(
+            body, mesh=mesh,
+            in_specs=(spec,) * streams, out_specs=(spec,) * streams,
+            check_vma=False,
+        )
+    )
+    try:
+        samples = time_callable_samples(
+            lambda: jax.block_until_ready(f(*xs)), repeats=repeats
+        )
+    except Exception:
+        return None
+    import numpy as np
+
+    return float(np.median(samples)), float(samples.std())
+
+
+def sweep_concurrent(
+    db: ProfileDB,
+    platform: str = "cpu_host",
+    config: Optional[SweepConfig] = None,
+    streams: int = 2,
+) -> int:
+    """Measure solo-vs-concurrent collective wall times into the DB.
+
+    For each (kind, payload) point on the full 1-D mesh, records a
+    ``streams=1`` solo baseline and a ``streams=k`` concurrent wall time
+    under the :data:`~repro.netprof.model.CONTENTION_FAMILY` family —
+    exactly the pairs :func:`repro.netprof.model.fit_link_contention`
+    consumes.  Returns entries recorded.
+    """
+    import jax
+
+    from repro.compat import AxisType, make_mesh
+
+    cfg = config or SweepConfig()
+    ndev = jax.device_count()
+    if ndev < 2:
+        return 0
+    plan = mesh_plans(ndev, subgroup_meshes=False)[0]
+    mesh = make_mesh(
+        plan.shape, plan.names,
+        axis_types=(AxisType.Auto,) * len(plan.shape),
+    )
+    axis = plan.sweep_axes[0]
+    group = plan.shape[0]
+    count = 0
+    for kind in cfg.collectives:
+        for payload in cfg.payload_bytes:
+            solo = _measure_concurrent(
+                mesh, plan, axis, kind, payload, 1, cfg.repeats
+            )
+            pair = _measure_concurrent(
+                mesh, plan, axis, kind, payload, streams, cfg.repeats
+            )
+            if solo is None or pair is None:
+                continue
+            recorded = recorded_payload(kind, payload, group)
+            db.add(
+                platform, CONTENTION_FAMILY,
+                _contention_entry(
+                    kind, recorded, group, 1, solo[0], solo[1], cfg.repeats
+                ),
+            )
+            db.add(
+                platform, CONTENTION_FAMILY,
+                _contention_entry(
+                    kind, recorded, group, streams,
+                    pair[0], pair[1], cfg.repeats,
+                ),
+            )
+            count += 2
+    meta = db.meta(platform).setdefault("netprof", {})
+    meta["contention_entries"] = len(
+        db.entries(platform, CONTENTION_FAMILY)
+    )
+    meta["contention_streams"] = int(streams)
+    return count
+
+
+def synthetic_contention_calibration(
+    db: ProfileDB,
+    platform: str,
+    *,
+    c: float = 0.6,
+    streams: int = 2,
+    groups: tuple[int, ...] = (2, 4, 8),
+    payload_bytes: tuple[int, ...] = SMOKE_PAYLOADS,
+    alpha_per_step: float = 5e-6,
+    link_bw: float = 4e9,
+    collectives: tuple[str, ...] = ("all-reduce", "collective-permute"),
+) -> int:
+    """Deterministic contention ground truth (tests + the bench gate).
+
+    Writes solo postal-model times and concurrent times stretched by the
+    exact shared-channel law ``t_k = t_1 * (1 + c*(k-1))``, so
+    ``fit_link_contention`` recovers ``c`` bit-exactly — no hardware.
+    """
+    from repro.core.hardware import wire_bytes
+
+    count = 0
+    for kind in collectives:
+        for g in groups:
+            for b in payload_bytes:
+                t1 = (
+                    latency_steps(kind, g) * alpha_per_step
+                    + wire_bytes(kind, float(b), g) / link_bw
+                )
+                tk = t1 * (1.0 + c * (streams - 1))
+                for s, t in ((1, t1), (streams, tk)):
+                    db.add(
+                        platform, CONTENTION_FAMILY,
+                        _contention_entry(kind, b, g, s, float(t), 0.0, 1),
+                    )
+                    count += 1
+    meta = db.meta(platform).setdefault("netprof", {})
+    meta["contention_entries"] = len(
+        db.entries(platform, CONTENTION_FAMILY)
+    )
+    meta["contention_streams"] = int(streams)
+    return count
 
 
 def synthetic_calibration(

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.database import ProfileDB, ProfileEntry
+from repro.pricing import PROV_DB, PROV_FIT, Ledger, PriceQuery
 from repro.serve.policy import ServeConfig
 
 FAMILY_PREFILL = "serve_prefill"
@@ -163,7 +164,10 @@ class ServePricer:
                 )
                 for view, by_x in by_view.items()
             }
-        self.stats: dict[str, int] = {}
+        # per-family provenance ledger (repro.pricing.Ledger) — the serve
+        # half of the same tally CollectivePricer keeps for collectives
+        self.ledger = Ledger(zero_provs=(PROV_DB, PROV_FIT))
+        self.stats = self.ledger.stats
 
     def covers(self, family: str, arch: str) -> bool:
         return (family, arch) in self.curves
@@ -173,21 +177,33 @@ class ServePricer:
     ) -> Optional[tuple[float, str]]:
         """(seconds, provenance) — None when this (family, arch) has no
         measurements at all (caller falls through to analytic)."""
-        from repro.netprof.pricing import PROV_DB, PROV_FIT
-
         hit = self.db.lookup(
             self.platform, family,
             {"arch": arch, _XKEY[family]: int(x), "view": int(view)},
         )
         if hit is not None and hit.mean_s > 0:
-            self.stats[PROV_DB] = self.stats.get(PROV_DB, 0) + 1
+            self.ledger.count(family, PROV_DB)
             return float(hit.mean_s), PROV_DB
         views = self.curves.get((family, arch))
         if not views:
             return None
         t = self._interp_views(views, float(x), float(view))
-        self.stats[PROV_FIT] = self.stats.get(PROV_FIT, 0) + 1
+        self.ledger.count(family, PROV_FIT)
         return t, PROV_FIT
+
+    def price_query(self, query: PriceQuery) -> Optional[tuple[float, str]]:
+        """The unified :class:`repro.pricing.Pricer` entry point.
+
+        ``query.kind`` is the serve family; ``query.args`` carry ``arch``,
+        ``view``, and the family's x-axis argument (``tokens`` for
+        prefill, ``slots`` for decode).
+        """
+        return self.price(
+            query.kind,
+            str(query.get("arch")),
+            int(query.get(_XKEY[query.kind], 0)),
+            int(query.get("view", 0)),
+        )
 
     @staticmethod
     def _interp_curve(

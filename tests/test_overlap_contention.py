@@ -1,0 +1,329 @@
+"""Overlap + link-contention regression gates.
+
+Back-compat contract of the contention-aware DES (ISSUE 9): pricing with a
+fitted :class:`repro.netprof.model.LinkContentionModel` must be a strict
+extension — timelines whose priced link intervals never overlap are
+bit-identical to the classic serialized run, for every registered config.
+Only genuinely concurrent link intervals may stretch (by gamma(k)), and a
+degenerate c=0 model is normalized away entirely.
+
+The executor-side twin of the same contract: bucketing the gradient
+all-reduce (``Strategy.overlap_buckets``) repartitions the simulated
+``gradAR`` nodes without moving a byte — wire and raw totals are exact
+across every config — and T011 polices the sim side (a timeline with T010
+overlap priced without an available contention model).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.timeline_checks import audit_timeline
+from repro.configs.base import get_config, list_archs
+from repro.core.autotuner import layer_cost_from_config
+from repro.core.estimator import OpTimeEstimator, dist_comm_bytes
+from repro.core.graph import DataflowGraph
+from repro.core.hardware import TPU_V5E
+from repro.core.simulator import simulate
+from repro.core.strategy import Strategy, pipeline_graph
+from repro.netprof.model import LinkContentionModel
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CM = LinkContentionModel(platform="test", c=0.5, samples=3)
+
+
+def _events(res):
+    return [
+        (e.node, e.name, e.device, e.start, e.end) for e in res.events
+    ]
+
+
+def _sim_pair(graph, duration_fn, contention):
+    """(serialized, contended) runs of one graph."""
+    base = simulate(graph, duration_fn, record_events=True)
+    cont = simulate(
+        graph, duration_fn, record_events=True, contention=contention
+    )
+    return base, cont
+
+
+def _assert_bit_equal(base, cont):
+    assert cont.makespan == base.makespan
+    assert cont.device_busy == base.device_busy
+    assert cont.time_by_kind == base.time_by_kind
+    assert _events(cont) == _events(base)
+
+
+# -- zero-overlap back-compat: every registered config ------------------------
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_zero_overlap_contention_bitparity(arch):
+    """dp-only plans put every collective on ONE link stream — intervals
+    never overlap, so the contention-aware run must be bit-identical."""
+    cfg = get_config(arch)
+    cost = layer_cost_from_config(cfg, 1, 256, 1)
+    strat = Strategy(dp=4, compression="int8")
+    g = pipeline_graph(cfg.num_layers, cost, strat)
+    est = OpTimeEstimator(TPU_V5E)
+    base, cont = _sim_pair(g, est.duration, CM)
+    assert base.contention is None
+    assert cont.contention is not None  # model attached, just never engaged
+    _assert_bit_equal(base, cont)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_c_zero_model_is_exact_legacy_path(arch):
+    """A degenerate c=0 model is normalized away even on overlapping
+    pipeline plans: gamma(k)=1 means exact serialized arithmetic."""
+    cfg = get_config(arch)
+    pp = 2 if cfg.num_layers % 2 == 0 else 1
+    cost = layer_cost_from_config(cfg, 1, 256, 1)
+    strat = Strategy(dp=4, pp=pp, microbatches=max(pp, 2) if pp > 1 else 1)
+    g = pipeline_graph(cfg.num_layers, cost, strat)
+    est = OpTimeEstimator(TPU_V5E)
+    zero = LinkContentionModel(platform="test", c=0.0, samples=1)
+    base, cont = _sim_pair(g, est.duration, zero)
+    assert cont.contention is None  # normalized to the legacy path
+    _assert_bit_equal(base, cont)
+
+
+# -- contention semantics ------------------------------------------------------
+
+
+def test_contention_stretches_only_overlap():
+    g = DataflowGraph()
+    g.add("a", "all-reduce", device="link:dp0")
+    g.add("b", "all-reduce", device="link:dp1")
+    dur = lambda n: 1.0
+    base, cont = _sim_pair(g, dur, CM)
+    assert base.makespan == 1.0  # free overlap, classic DES
+    # both 1.0s jobs fully shared: each runs at rate 1/gamma(2) = 1/1.5
+    assert cont.makespan == pytest.approx(1.5)
+    full = simulate(
+        g, dur, record_events=True,
+        contention=LinkContentionModel(platform="t", c=1.0, samples=1),
+    )
+    assert full.makespan == pytest.approx(2.0)  # c=1 == full serialization
+
+
+def test_same_link_fifo_unchanged():
+    g = DataflowGraph()
+    g.add("a", "all-reduce", device="link:dp0")
+    g.add("b", "all-reduce", device="link:dp0")
+    base, cont = _sim_pair(g, lambda n: 1.0, CM)
+    assert base.makespan == cont.makespan == 2.0
+    _assert_bit_equal(base, cont)
+
+
+# -- T011: silent serialized pricing -------------------------------------------
+
+
+def test_t011_fires_only_when_model_available_and_unapplied():
+    g = DataflowGraph()
+    g.add("a", "all-reduce", device="link:dp0")
+    g.add("b", "all-reduce", device="link:dp1")
+    dur = lambda n: 1.0
+    serialized = simulate(g, dur, record_events=True)
+    contended = simulate(g, dur, record_events=True, contention=CM)
+
+    fired = audit_timeline(serialized, g, contention_available=True)
+    assert [d.code for d in fired.warnings] == ["T011"]
+    quiet_no_model = audit_timeline(serialized, g, contention_available=False)
+    assert "T011" not in quiet_no_model.codes()
+    quiet_applied = audit_timeline(contended, g, contention_available=True)
+    assert "T011" not in quiet_applied.codes()
+
+
+def test_analyzer_applies_available_contention_model():
+    from repro.analysis.analyzer import analyze_training_plan
+    from repro.core.database import ProfileDB
+    from repro.netprof.sweep import (
+        synthetic_calibration, synthetic_contention_calibration,
+    )
+
+    db = ProfileDB()
+    synthetic_calibration(db, "tpu_v5e")
+    synthetic_contention_calibration(db, "tpu_v5e", c=0.4)
+    est = OpTimeEstimator(TPU_V5E, db)
+    assert est.contention_model is not None
+    cfg = get_config("llama3.2-1b")
+    strat = Strategy(dp=4, pp=2, microbatches=4, compression="int8",
+                     overlap_buckets=4)
+    rep = analyze_training_plan(
+        cfg, strat, micro_batch=1, seq=256, estimator=est
+    )
+    assert rep.ok, rep.summary_lines()
+    assert "T011" not in rep.codes()
+    assert rep.metrics.get("sim_contention_applied") == 1.0
+    # same plan, no estimator: no model available, T011 must stay quiet
+    rep2 = analyze_training_plan(cfg, strat, micro_batch=1, seq=256)
+    assert "T011" not in rep2.codes()
+    assert "sim_contention_applied" not in rep2.metrics
+
+
+# -- bucketed gradAR: exact byte repartition -----------------------------------
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_gradar_bucket_byte_partition(arch):
+    cfg = get_config(arch)
+    if cfg.num_layers % 4 != 0:
+        pytest.skip("needs layers divisible by pp*vstages=4")
+    # bucketing repartitions a stage's backward CHUNKS, so the stage needs
+    # >= 2 of them: interleaved vstages=2 gives every stage two
+    cost = layer_cost_from_config(cfg, 1, 256, 1)
+    mk = lambda ob: pipeline_graph(
+        cfg.num_layers, cost,
+        Strategy(dp=4, pp=2, vstages=2, schedule="interleaved_1f1b",
+                 microbatches=4, compression="int8", overlap_buckets=ob),
+    )
+    g0, g4 = mk(0), mk(4)
+    ar0 = [n for n in g0.nodes if n.name.startswith("gradAR")]
+    ar4 = [n for n in g4.nodes if n.name.startswith("gradAR")]
+    assert len(ar4) > len(ar0)
+    assert sum(n.comm_bytes for n in ar4) == pytest.approx(
+        sum(n.comm_bytes for n in ar0), rel=0, abs=0
+    )
+    assert sum(dist_comm_bytes(n) for n in ar4) == pytest.approx(
+        sum(dist_comm_bytes(n) for n in ar0)
+    )
+    # every bucket node sits on its stage's dp link (same-link FIFO: the
+    # win is the earlier launch, never a new wire)
+    assert {n.device for n in ar4} == {n.device for n in ar0}
+    # buckets launch earlier: the first bucket depends on strictly fewer
+    # backward chunks than the monolithic node
+    deps4 = min(len(n.deps) for n in ar4)
+    deps0 = min(len(n.deps) for n in ar0)
+    assert deps4 < deps0
+
+
+def test_bucketed_graph_overlap_speedup():
+    """The tentpole's measurable win: with a contention-priced DES, the
+    bucketed plan's earlier launches beat the monolithic all-reduce."""
+    cfg = get_config("llama3.2-1b")
+    cost = layer_cost_from_config(cfg, 1, 256, 1)
+    mk = lambda ob: pipeline_graph(
+        cfg.num_layers, cost,
+        Strategy(dp=4, pp=2, vstages=2, schedule="interleaved_1f1b",
+                 microbatches=4, compression="int8", overlap_buckets=ob),
+    )
+    est = OpTimeEstimator(TPU_V5E)
+    mono = simulate(mk(0), est.duration, contention=CM)
+    bucketed = simulate(mk(4), est.duration, contention=CM)
+    assert bucketed.makespan < mono.makespan
+
+
+# -- executor twin: bucketed psum bit-parity on real devices -------------------
+
+_BUCKET_PSUM_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import AxisType, shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compress import (
+        bucketed_pmean, compressed_psum, init_feedback_state,
+    )
+
+    DP = 4
+    mesh = jax.make_mesh((DP,), ("data",), axis_types=(AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((DP, 8, 16)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((DP, 33)), jnp.float32),
+        "c": jnp.asarray(rng.standard_normal((DP, 2, 3, 5)), jnp.float32),
+    }
+    state = init_feedback_state(
+        {k: v[0] for k, v in tree.items()}, DP
+    )
+
+    def run(fn):
+        wrapped = shard_map(
+            fn, mesh=mesh,
+            in_specs=(jax.tree_util.tree_map(lambda _: P("data"), tree),),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return jax.jit(wrapped)(tree)
+
+    for buckets in (0, 2, 3):
+        got = run(functools.partial(
+            bucketed_pmean, axis_name="data", buckets=buckets))
+        if buckets == 0:
+            ref = got
+        else:
+            for k in ref:
+                np.testing.assert_array_equal(
+                    np.asarray(ref[k]), np.asarray(got[k]))
+
+    def comp(grads, buckets):
+        local = {k: v[0] for k, v in state.items()}
+        means, _ = compressed_psum(grads, "data", local, buckets=buckets)
+        return means
+
+    for buckets in (0, 2, 3):
+        got = run(functools.partial(comp, buckets=buckets))
+        if buckets == 0:
+            ref = got
+        else:
+            for k in ref:
+                np.testing.assert_array_equal(
+                    np.asarray(ref[k]), np.asarray(got[k]))
+    print("bucketed_psum_parity_ok")
+    """
+)
+
+
+@pytest.mark.slow
+def test_bucketed_psum_bitparity_4_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _BUCKET_PSUM_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "bucketed_psum_parity_ok" in out.stdout
+
+
+# -- RunSpec ------------------------------------------------------------------
+
+
+def test_runspec_roundtrip_and_flags():
+    import argparse
+
+    from repro.launch import spec as runspec
+
+    s = runspec.RunSpec(compression="int8", overlap_buckets=4,
+                        overlap_comm=True, pp=2, microbatches=4)
+    assert runspec.RunSpec.from_dict(s.to_dict()) == s
+    # defaults are elided from the serialized form
+    assert "slots" not in s.to_dict()
+    strat = s.strategy(dp=4)
+    assert strat.overlap_buckets == 4 and strat.compression == "int8"
+    assert strat.pp == 2
+
+    ap = argparse.ArgumentParser()
+    runspec.add_args(ap, "model", "train")
+    args = ap.parse_args(
+        ["--compression", "int8", "--overlap-buckets", "4",
+         "--overlap-comm", "--pp", "2", "--microbatches", "4"]
+    )
+    assert runspec.from_args(args) == s
+
+    class R:
+        extras: dict = {}
+
+    r = R()
+    r.extras = {}
+    runspec.attach(r, s)
+    assert r.extras["run_spec"] == s.to_dict()
