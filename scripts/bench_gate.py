@@ -13,8 +13,10 @@ against the committed baseline within its tolerance band.
 Exit code 1 on any out-of-band metric or on a metric the baseline pins
 that the current run no longer produces.  Metrics new since the baseline
 are reported but do not fail the gate (pin them with --update-baseline).
-The report (default ``BENCH_pr4.json``) is uploaded as a CI artifact so a
-red gate is diagnosable from the workflow page.
+The report (default ``BENCH_pr4.json``) embeds the full per-metric drift
+table (baseline vs current vs tolerance, one status per row) and is
+uploaded as a CI artifact; on failure the same table is printed aligned,
+so a red gate is diagnosable from the workflow page.
 """
 from __future__ import annotations
 
@@ -74,36 +76,95 @@ def collect(smoke: bool) -> dict[str, dict]:
     return metrics
 
 
+def drift_table(
+    current: dict[str, dict],
+    baseline: dict[str, dict],
+    allow_missing: bool = False,
+) -> list[dict]:
+    """One row per metric either side knows: baseline vs current vs
+    tolerance.  ``status`` is ``ok`` / ``fail`` / ``missing`` (pinned but
+    not produced — a failure unless ``allow_missing``) / ``skipped``
+    (missing under --smoke) / ``new`` (produced but not pinned — never a
+    failure; pin it with --update-baseline).  This table IS the gate:
+    :func:`compare` derives its verdict from it, and the JSON artifact
+    embeds it so a red CI run shows every metric's margin, not just the
+    ones that tripped.
+    """
+    rows: list[dict] = []
+    for name, base in sorted(baseline.items()):
+        row = {
+            "name": name,
+            "baseline": float(base["value"]),
+            "current": None,
+            "diff": None,
+            "tol": max(
+                float(base.get("tol_abs", 0.0)),
+                float(base.get("tol_rel", 0.0)) * abs(float(base["value"])),
+            ),
+        }
+        if name not in current:
+            row["status"] = "skipped" if allow_missing else "missing"
+        else:
+            row["current"] = float(current[name]["value"])
+            row["diff"] = row["current"] - row["baseline"]
+            row["status"] = "ok" if abs(row["diff"]) <= row["tol"] else "fail"
+        rows.append(row)
+    for name in sorted(set(current) - set(baseline)):
+        rows.append({
+            "name": name, "baseline": None,
+            "current": float(current[name]["value"]),
+            "diff": None, "tol": None, "status": "new",
+        })
+    return rows
+
+
+def render_drift(rows: list[dict]) -> str:
+    """Aligned per-metric drift table (printed on gate failure)."""
+    def fmt(v):
+        return "-" if v is None else f"{v:.6g}"
+
+    header = ("metric", "baseline", "current", "diff", "tol", "status")
+    table = [header] + [
+        (r["name"], fmt(r["baseline"]), fmt(r["current"]), fmt(r["diff"]),
+         fmt(r["tol"]), r["status"])
+        for r in rows
+    ]
+    widths = [max(len(row[i]) for row in table) for i in range(len(header))]
+    lines = []
+    for i, row in enumerate(table):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
 def compare(
     current: dict[str, dict],
     baseline: dict[str, dict],
     allow_missing: bool = False,
+    rows: list[dict] | None = None,
 ) -> list[str]:
     failures = []
-    for name, base in sorted(baseline.items()):
-        if name not in current:
-            if allow_missing:
-                # --smoke intentionally skips the execution rows; the full
-                # CI run still fails on pinned-but-missing metrics
-                print(f"[bench-gate] skipped (not produced in this mode): "
-                      f"{name}")
-                continue
-            failures.append(f"{name}: pinned in baseline but not produced")
-            continue
-        cur = current[name]
-        tol = max(
-            float(base.get("tol_abs", 0.0)),
-            float(base.get("tol_rel", 0.0)) * abs(float(base["value"])),
-        )
-        diff = abs(float(cur["value"]) - float(base["value"]))
-        if diff > tol:
+    for r in (drift_table(current, baseline, allow_missing)
+              if rows is None else rows):
+        if r["status"] == "missing":
             failures.append(
-                f"{name}: {cur['value']:.6g} vs baseline "
-                f"{base['value']:.6g} (|diff| {diff:.3g} > tol {tol:.3g})"
+                f"{r['name']}: pinned in baseline but not produced"
             )
-    for name in sorted(set(current) - set(baseline)):
-        print(f"[bench-gate] NEW metric (not gated): {name} = "
-              f"{current[name]['value']:.6g}")
+        elif r["status"] == "skipped":
+            # --smoke intentionally skips the execution rows; the full
+            # CI run still fails on pinned-but-missing metrics
+            print(f"[bench-gate] skipped (not produced in this mode): "
+                  f"{r['name']}")
+        elif r["status"] == "fail":
+            failures.append(
+                f"{r['name']}: {r['current']:.6g} vs baseline "
+                f"{r['baseline']:.6g} (|diff| {abs(r['diff']):.3g} > "
+                f"tol {r['tol']:.3g})"
+            )
+        elif r["status"] == "new":
+            print(f"[bench-gate] NEW metric (not gated): {r['name']} = "
+                  f"{r['current']:.6g}")
     return failures
 
 
@@ -118,28 +179,37 @@ def main() -> int:
 
     metrics = collect(smoke=args.smoke)
     report = {"metrics": metrics}
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
-    print(f"[bench-gate] wrote {args.out} ({len(metrics)} metrics)")
+
+    def write_report():
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[bench-gate] wrote {args.out} ({len(metrics)} metrics)")
 
     if args.update_baseline:
+        write_report()
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
         with open(args.baseline, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
+            json.dump({"metrics": metrics}, f, indent=2, sort_keys=True)
         print(f"[bench-gate] baseline updated: {args.baseline}")
         return 0
 
     if not os.path.exists(args.baseline):
+        write_report()
         print(f"[bench-gate] FAIL: no baseline at {args.baseline} "
               f"(run with --update-baseline to pin one)")
         return 1
     with open(args.baseline) as f:
         baseline = json.load(f)["metrics"]
-    failures = compare(metrics, baseline, allow_missing=args.smoke)
+    rows = drift_table(metrics, baseline, allow_missing=args.smoke)
+    report["drift"] = rows
+    write_report()
+    failures = compare(metrics, baseline, allow_missing=args.smoke,
+                       rows=rows)
     if failures:
         print(f"[bench-gate] FAIL ({len(failures)} regressions):")
         for msg in failures:
             print(f"  - {msg}")
+        print(render_drift(rows))
         return 1
     print(f"[bench-gate] OK: no regressions vs the "
           f"{len(baseline)}-metric baseline")

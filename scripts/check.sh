@@ -20,9 +20,17 @@
 #                        forced-CPU host into ${NETPROF_DB:-netprof_db.json},
 #                        then verify a pp+int8+MoE simulation prices every
 #                        collective from the measured chain (0 ring fallbacks)
+#   check.sh obs         telemetry smoke (slow CI): forced-8-device dp×pp
+#                        train step and the serve acceptance trace, both
+#                        with --obs — exports the merged sim+real overlay
+#                        traces (OBS_train.json / OBS_serve.json, CI
+#                        artifacts) and fails if the divergence attributor
+#                        reports any O001/O002 (vocabulary drift between
+#                        the real executors and the simulated graphs)
 #   check.sh lint        ruff (config in pyproject.toml)
-#   check.sh types       mypy over src/repro/{core,dist,analysis,serve,netprof}
-#                        (permissive-strict config in pyproject.toml)
+#   check.sh types       mypy over src/repro/{core,dist,analysis,serve,
+#                        netprof,obs} (permissive-strict config in
+#                        pyproject.toml)
 #   check.sh analyze     static plan verifier (repro.analysis) over every
 #                        registered config, plus the serve-plan ledger +
 #                        ProfileDB coverage audit over the committed
@@ -73,6 +81,45 @@ if [[ "${1:-}" == "serve" ]]; then
         --parity --db "$DB" --tol-rel 0.6 --report SERVE_parity.json
 fi
 
+if [[ "${1:-}" == "obs" ]]; then
+    # telemetry smoke (slow CI): both real executors under --obs, overlay
+    # traces exported, and the divergence attributor must join the real
+    # span vocabulary to the simulated node uids with zero O001 (real
+    # span without a sim twin) and zero O002 (sim node never observed).
+    # Train: dp4 x pp2 on a forced-8-device host.  Serve: the committed
+    # acceptance trace, priced from a freshly calibrated serve DB (same
+    # placement as the serve gate) so the measured-db class is this
+    # host's own measurements.
+    XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+        python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 2 --seq 64 --batch 8 --pp 2 --microbatches 2 \
+        --obs --trace-out OBS_train.json
+    DB="${SERVE_DB:-serve_db.json}"
+    SERVE_ARGS=(--arch llama3.2-1b --smoke --slots 8 --max-len 64
+                --block-size 8 --chunk 8 --force-host-devices 8 --shard)
+    python -m repro.launch.serve "${SERVE_ARGS[@]}" --calibrate --db "$DB"
+    python -m repro.launch.serve "${SERVE_ARGS[@]}" \
+        --trace-file benchmarks/traces/serve_acceptance.json \
+        --obs --db "$DB" --trace-out OBS_serve.json
+    exec python - <<'EOF'
+import json, sys
+bad = 0
+for path in ("OBS_train_report.json", "OBS_serve_report.json"):
+    rep = json.load(open(path))
+    hits = [f for f in rep["findings"] if f["code"] in ("O001", "O002")]
+    frac = rep["metrics"].get("obs_gap_attributed_frac", 0.0)
+    print(f"[obs-gate] {path}: {len(hits)} O001/O002 findings, "
+          f"gap attribution {frac * 100:.1f}%")
+    for f in hits:
+        print(f"[obs-gate]   {f['code']}: {f['message']}")
+    bad += len(hits)
+    if frac < 0.95:
+        print(f"[obs-gate]   FAIL: gap attribution below 95%")
+        bad += 1
+sys.exit(1 if bad else 0)
+EOF
+fi
+
 if [[ "${1:-}" == "docs" ]]; then
     # markdown link integrity + the schedule-accuracy smoke rows
     python scripts/check_docs.py
@@ -110,7 +157,7 @@ if [[ "${1:-}" == "types" ]]; then
         exit 0
     fi
     exec mypy src/repro/core src/repro/dist src/repro/analysis \
-        src/repro/serve src/repro/netprof
+        src/repro/serve src/repro/netprof src/repro/obs
 fi
 
 if [[ "${1:-}" == "analyze" ]]; then

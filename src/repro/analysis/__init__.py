@@ -19,6 +19,11 @@ representations, three lint families, one diagnostics engine:
   extrapolation / fallback before anything runs, and emits the minimal
   calibration grid that would close the gaps (A005+ codes).
 
+One runtime family lives outside this package: :mod:`repro.obs.diff`
+joins *real* recorded spans to simulated intervals and reports through
+the same engine (O* codes); its :func:`~repro.obs.diff.divergence_report`
+is re-exported here for symmetry.
+
 Load-bearing consumers: ``launch/train.py --analyze`` (raises
 :class:`PlanVerificationError` before executing a bad plan),
 ``core/autotuner.py`` (prunes statically-illegal candidates before
@@ -72,3 +77,16 @@ from repro.analysis.timeline_checks import (  # noqa: F401
     audit_timeline,
     link_contention,
 )
+
+
+def __getattr__(name: str):
+    # lazy: repro.obs.diff imports this package's diagnostics engine, so a
+    # module-level import here would be circular whenever repro.obs loads
+    # first
+    if name == "divergence_report":
+        from repro.obs.diff import divergence_report
+
+        return divergence_report
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}"
+    )

@@ -11,7 +11,9 @@ Codes are STABLE: tools (CI gates, the autotuner's pruner, tests) key on
 them, so a code is never renumbered or reused — see docs/analysis.md for
 the full table.  Prefixes: ``G`` graph lints, ``A`` accounting
 completeness (including ProfileDB coverage, A005+), ``S`` schedule static
-checks, ``T`` timeline (DES) audit, ``R`` serve-plan resource ledger.
+checks, ``T`` timeline (DES) audit, ``R`` serve-plan resource ledger,
+``O`` observability / sim-vs-real divergence attribution
+(:mod:`repro.obs.diff`).
 """
 from __future__ import annotations
 
@@ -87,6 +89,15 @@ DIAGNOSTIC_CODES: dict[str, str] = {
             "while prefilling, or was used without an admitted request",
     "R007": "per-request token-count bounds broken: tokens emitted outside "
             "[1, effective_max_tokens] (EOS may finish early, never late)",
+    # -- observability / divergence attribution (repro.obs.diff) ------------
+    "O000": "divergence attribution summary: fraction of the sim-vs-real "
+            "step-time gap accounted for by named node uids",
+    "O001": "real span carries a node uid the simulation never priced "
+            "(span vocabulary drift, or the executor ran unmodeled work)",
+    "O002": "simulated node never observed on the real side (replay or "
+            "engine skipped it: sim coverage untested there)",
+    "O003": "pricing provenance class aggregate relative error exceeds its "
+            "tolerance (the calibration for that class is stale or wrong)",
 }
 
 

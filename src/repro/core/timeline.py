@@ -4,9 +4,12 @@ Each simulated device becomes its own trace *process* (pid) with a
 ``process_name`` metadata record, so heterogeneous timelines — pipeline
 stages, per-stage dp links, the pp boundary link — render as separately
 labeled swimlanes instead of anonymous tids under one process.  Pids are
-ordered compute-devices-first (``chip``, ``stage0``, ``stage1``, ...), then
-links, matching how you read a pipeline trace top-to-bottom; see
-docs/timelines.md for a walkthrough.
+ordered compute-devices-first (``chip``, the serve engine host, ``stage0``,
+``stage1``, ..., serve ``slot``s), then links, then counter tracks,
+matching how you read a pipeline trace top-to-bottom; see
+docs/timelines.md for a walkthrough.  The sim-vs-real overlay exporter
+(:mod:`repro.obs.overlay`) reuses :func:`_device_sort_key` so both
+exporters order lanes identically.
 """
 from __future__ import annotations
 
@@ -16,29 +19,51 @@ from repro.core.simulator import SimResult
 
 
 def _device_sort_key(device: str) -> tuple:
-    """chip first, then stages by number, then links alphabetically."""
-    if device == "chip":
+    """chip/host first, then stages and serve slots by number, then links
+    alphabetically, then everything else, with counter tracks last."""
+    if device in ("chip", "host", "engine"):
         return (0, 0, device)
-    if device.startswith("stage"):
-        try:
-            return (1, int(device[len("stage"):]), device)
-        except ValueError:
-            return (1, 0, device)
+    for prefix, rank in (("stage", 1), ("slot", 2)):
+        if device.startswith(prefix):
+            try:
+                return (rank, int(device[len(prefix):]), device)
+            except ValueError:
+                return (rank, 0, device)
     if device.startswith("link"):
-        return (2, 0, device)
-    return (3, 0, device)
+        return (3, 0, device)
+    if device.startswith("ctr:"):
+        return (5, 0, device)
+    return (4, 0, device)
 
 
 def to_chrome_trace(
-    result: SimResult, path: str | None = None, graph=None
+    result: SimResult, path: str | None = None, graph=None, counters=None
 ) -> dict:
     """Export a simulated timeline; pass the simulated ``graph`` to attach
     per-event pricing provenance (``measured-db`` / ``measured-fit`` /
     ``ring``, written into node meta by the estimator's collective chain —
     see repro.netprof) as trace-event args, so a perfetto click shows
     whether that box was priced from a measurement or from the spec sheet.
+
+    ``counters`` is an optional iterable of
+    :class:`repro.obs.record.Counter` samples (or ``(name, t, value)``
+    tuples); each distinct counter name becomes a ``ctr:<name>`` process of
+    "C" events rendered below the device lanes (in-flight microbatches,
+    link concurrency, KV free blocks ...).
     """
-    devices = sorted({e.device for e in result.events}, key=_device_sort_key)
+    counter_samples: list[tuple[str, float, float]] = []
+    for c in counters or ():
+        if isinstance(c, tuple):
+            nm, t, v = c
+        else:
+            nm, t, v = c.name, c.t, c.value
+        counter_samples.append((str(nm), float(t), float(v)))
+
+    devices = sorted(
+        {e.device for e in result.events}
+        | {f"ctr:{nm}" for nm, _, _ in counter_samples},
+        key=_device_sort_key,
+    )
     pid = {d: i for i, d in enumerate(devices)}
     events = []
     for e in result.events:
@@ -56,6 +81,17 @@ def to_chrome_trace(
             if prov is not None:
                 ev["args"] = {"time_provenance": prov}
         events.append(ev)
+    for nm, t, v in counter_samples:
+        events.append(
+            {
+                "name": nm,
+                "ph": "C",
+                "ts": t * 1e6,
+                "pid": pid[f"ctr:{nm}"],
+                "tid": 0,
+                "args": {nm: v},
+            }
+        )
     for d, p in pid.items():
         events.append(
             {
@@ -88,5 +124,5 @@ def to_chrome_trace(
     trace = {"traceEvents": events, "displayTimeUnit": "ms"}
     if path:
         with open(path, "w") as f:
-            json.dump(trace, f)
+            json.dump(trace, f, sort_keys=True)
     return trace

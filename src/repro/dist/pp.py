@@ -626,3 +626,31 @@ def schedule_transfer_bytes(
     collective-permute nodes must sum to (tests/test_schedule_parity.py).
     """
     return schedule.comm_bytes(boundary_bytes(activation_shape, dtype))
+
+
+def schedule_span_names(
+    schedule: PipelineSchedule,
+) -> list[tuple[str, str]]:
+    """(node-uid, device) pairs of one scheduled step, in table order.
+
+    The executor-side span vocabulary: exactly the names and devices
+    ``repro.core.strategy.pipeline_graph`` gives its compute and
+    collective-permute nodes, emitted in the schedule's step order.  The
+    telemetry replay (:mod:`repro.obs.replay`) and divergence attributor
+    join real measurements to simulated intervals on these uids, so this
+    list is asserted against the graph's node set in tests/test_obs.py —
+    if the vocabularies ever drift, that drift is a test failure here and
+    an O001/O002 diagnostic at runtime.
+    """
+    from repro.dist.schedules import FWD
+
+    V = schedule.n_vstages
+    out: list[tuple[str, str]] = []
+    for step in schedule.steps():
+        k, m = step.vstage, step.microbatch
+        out.append((step.name, f"stage{step.stage}"))
+        if step.phase == FWD and k < V - 1:
+            out.append((f"sendF{k}.{m}", "link:pp"))
+        elif step.phase != FWD and k > 0:
+            out.append((f"sendB{k}.{m}", "link:pp"))
+    return out

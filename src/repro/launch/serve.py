@@ -61,9 +61,10 @@ def _parse() -> argparse.Namespace:
     from repro.launch import spec as runspec
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    # shared launch surface (repro.launch.spec): --arch/--smoke/--seed and
-    # the engine shape --slots/--max-len/--block-size/--chunk
-    runspec.add_args(ap, "model", "serve")
+    # shared launch surface (repro.launch.spec): --arch/--smoke/--seed,
+    # the engine shape --slots/--max-len/--block-size/--chunk, and the
+    # telemetry flags --obs/--trace-out (repro.obs)
+    runspec.add_args(ap, "model", "serve", "obs")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id for engine early exit (-1: none; "
                          "parity runs must leave this unset — the twin "
@@ -166,7 +167,7 @@ def _serve_db(args, cfg, scfg):
     return None
 
 
-def _run_engine(args, cfg, scfg, trace):
+def _run_engine(args, cfg, scfg, trace, recorder=None):
     import jax
 
     from repro.models import build_model
@@ -190,6 +191,7 @@ def _run_engine(args, cfg, scfg, trace):
         model, params, slots=args.slots, max_len=args.max_len,
         eos_id=None if args.eos_id < 0 else args.eos_id,
         block_size=args.block_size, chunk=args.chunk, mesh=mesh,
+        recorder=recorder,
     )
     # keep jit compile time out of the measured step durations — the
     # parity gate compares them against offline-profiled predictions
@@ -301,7 +303,7 @@ def main() -> int:
               f"{latency['per_token_p99_s'] * 1e3:.3f}ms")
 
     sim_res = None
-    if args.simulate or args.parity:
+    if args.simulate or args.parity or args.obs:
         from repro.core.estimator import OpTimeEstimator
         from repro.core.hardware import CPU_HOST
         from repro.core.profiler import calibrate_host
@@ -311,7 +313,17 @@ def main() -> int:
 
         db = _serve_db(args, cfg, scfg)
         if db is None:
-            raise SystemExit("--simulate/--parity need --db or --synthetic-db")
+            if not (args.simulate or args.parity):
+                # --obs alone: the overlay needs *a* priced twin; fall back
+                # to the deterministic synthetic grid rather than refusing
+                print("[obs] no --db/--synthetic-db: pricing the sim side "
+                      "from the synthetic serve grid")
+                args.synthetic_db = True
+                db = _serve_db(args, cfg, scfg)
+            else:
+                raise SystemExit(
+                    "--simulate/--parity need --db or --synthetic-db"
+                )
         platform = (
             calibrate_host(db) if db.entries("cpu_host", "dot") else CPU_HOST
         )
@@ -325,7 +337,7 @@ def main() -> int:
             for d in audit.errors:
                 print(f"[serve] AUDIT {d.code}: {d.message}")
             return 1
-        if args.simulate and not args.parity:
+        if args.simulate and not (args.parity or args.obs):
             if args.report:
                 from repro.serve.report import save_report
 
@@ -340,13 +352,49 @@ def main() -> int:
         save_report, serve_parity_report,
     )
 
-    engine = _run_engine(args, cfg, scfg, trace)
+    recorder = None
+    if args.obs:
+        from repro.obs import Recorder
+
+        recorder = Recorder(enabled=True)
+    engine = _run_engine(args, cfg, scfg, trace, recorder=recorder)
     records = records_from_requests(engine.finished)
     makespan = max(
         (t for r in engine.finished for t in r.token_times_s), default=0.0
     )
     eng_latency = latency_report(records, makespan)
     _show("engine", eng_latency)
+
+    if args.obs:
+        from repro.obs import divergence_report, overlay_chrome_trace
+
+        # re-price the twin in replay mode: the scheduler clock follows the
+        # engine's measured step durations, so the compositions (and node
+        # uids) are bit-identical to what the recorder just observed, and
+        # the divergence join measures pure pricing error instead of
+        # admission-timing drift
+        obs_sim = simulate_serve(
+            trace, cfg, scfg, est, name=f"serve-{cfg.name}",
+            step_durations=engine.step_durations,
+        )
+        obs_report = divergence_report(
+            recorder, obs_sim.timeline, obs_sim.graph, name="serve-obs"
+        )
+        obs_report.metrics["obs_engine_step_s"] = float(
+            sum(engine.step_durations)
+        )
+        runspec.attach(obs_report, spec)
+        for line in obs_report.summary_lines():
+            print(f"[obs] {line}")
+        if spec.trace_out:
+            overlay_chrome_trace(
+                obs_sim.timeline, recorder, spec.trace_out,
+                graph=obs_sim.graph,
+            )
+            print(f"[obs] overlay trace written to {spec.trace_out}")
+            rpath = os.path.splitext(spec.trace_out)[0] + "_report.json"
+            obs_report.to_json(rpath)
+            print(f"[obs] divergence report written to {rpath}")
 
     if not args.parity:
         if args.report:

@@ -51,6 +51,9 @@ class RunSpec:
     # dryrun cell
     shape: str = ""
     mesh: str = "single"
+    # observability (repro.obs; docs/observability.md)
+    obs: bool = False
+    trace_out: str = ""
 
     # -- serialization -------------------------------------------------------
 
@@ -164,6 +167,19 @@ _GROUPS: dict[str, list[tuple[str, str, dict]]] = {
     "dryrun": [
         ("--shape", "shape", {"help": "shape cell name (repro.configs.SHAPES)"}),
         ("--mesh", "mesh", {"choices": ["single", "multi", "both"]}),
+    ],
+    "obs": [
+        ("--obs", "obs",
+         {"help": "record runtime telemetry (repro.obs): span the real "
+                  "executor under the simulator's node-uid vocabulary, "
+                  "run the divergence attributor (O-code diagnostics), "
+                  "and print the sim-vs-real gap attribution "
+                  "(docs/observability.md)"}),
+        ("--trace-out", "trace_out",
+         {"help": "write the merged sim+real Chrome/Perfetto overlay "
+                  "trace here (implies nothing without --obs); the "
+                  "divergence report JSON lands next to it as "
+                  "<stem>_report.json"}),
     ],
 }
 

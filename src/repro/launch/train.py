@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +28,9 @@ from repro.launch import spec as runspec
 from repro.models import build_model
 from repro.models.sharding import data_axis_size, make_ctx, use_sharding
 from repro.optim import cosine_with_warmup, make_optimizer
+from repro.obs.record import Recorder
 from repro.train import make_sharded_train_step
-from repro.train.step import init_state
+from repro.train.step import init_state, run_timed_step
 
 
 def build_mesh(pp: int = 0):
@@ -281,6 +281,82 @@ def pipeline_parity_report(
     return sim
 
 
+def _obs_report(
+    rec, cfg, plan, mesh, params, *, batch: int, seq: int, dp: int,
+    grad_accum: int, compression: str, overlap_buckets: int,
+    netprof_db: str | None, trace_out: str, run_spec=None, log_fn=print,
+) -> None:
+    """The --obs post-pass: price the plan, replay its ops for real,
+    attribute the sim-vs-real gap, and export the overlay trace.
+
+    Per-op spans cannot be host-timed inside the executor's shard_map, so
+    the real side of each op comes from :func:`repro.obs.replay`'s
+    instrumented standalone re-execution on the live mesh — the offline
+    profiling the paper's estimator is built from, turned into spans
+    under the simulator's own node uids (docs/observability.md).
+    """
+    from repro.obs import (
+        divergence_report,
+        overlay_chrome_trace,
+        replay_pipeline_ops,
+    )
+
+    sim_res = graph = None
+    measured = None
+    step_spans = [
+        s for s in rec.spans if s.labels.get("role") == "step"
+    ]
+    if step_spans:
+        measured = sum(s.duration for s in step_spans) / len(step_spans)
+    if plan is not None:
+        from repro.core.estimator import OpTimeEstimator
+        from repro.core.hardware import CPU_HOST
+        from repro.core.simulator import simulate
+        from repro.core.strategy import model_pipeline_graph
+
+        micro_bs = max(batch // (dp * grad_accum * plan.microbatches), 1)
+        strat = plan.strategy(dp=dp, compression=compression)
+        if overlap_buckets:
+            strat = dataclasses.replace(
+                strat, overlap_buckets=overlap_buckets
+            )
+        graph = model_pipeline_graph(cfg, strat, micro_bs, seq)
+        if netprof_db:
+            est, _ = netprof_estimator(netprof_db, log_fn=log_fn)
+        else:
+            est = OpTimeEstimator(CPU_HOST)
+        sim_res = simulate(graph, est.duration, record_events=True)
+        replay_pipeline_ops(
+            rec, graph, cfg=cfg, plan=plan, mesh=mesh, params=params,
+            micro_batch=micro_bs, seq=seq, log_fn=log_fn,
+        )
+        report = divergence_report(rec, sim_res, graph, name="train-obs")
+        if measured is not None:
+            report.metrics["obs_step_mean_s"] = float(measured)
+            log_fn(
+                f"[obs] mean real step {measured * 1e3:.1f}ms vs simulated "
+                f"makespan {sim_res.makespan * 1e3:.2f}ms (the step also "
+                f"carries executor dispatch overhead the per-op "
+                f"attribution below excludes)"
+            )
+        runspec.attach(report, run_spec)
+        for line in report.summary_lines():
+            log_fn(f"[obs] {line}")
+    else:
+        report = None
+        log_fn(
+            "[obs] no pipeline plan (--pp 1): recorded "
+            f"{len(rec.spans)} spans; overlay will carry real tracks only"
+        )
+    if trace_out:
+        overlay_chrome_trace(sim_res, rec, trace_out, graph=graph)
+        log_fn(f"[obs] overlay trace written to {trace_out}")
+        if report is not None:
+            rpath = os.path.splitext(trace_out)[0] + "_report.json"
+            report.to_json(rpath)
+            log_fn(f"[obs] divergence report written to {rpath}")
+
+
 def train(
     cfg,
     *,
@@ -301,6 +377,8 @@ def train(
     overlap_comm: bool = False,
     netprof_db: str | None = None,
     analyze: bool = False,
+    obs: bool = False,
+    trace_out: str = "",
     run_spec=None,
     log_every: int = 10,
     ckpt_every: int = 50,
@@ -411,14 +489,18 @@ def train(
         pol = StragglerPolicy()
 
         losses = []
-        t_train0 = time.perf_counter()
+        # telemetry recorder: disabled it is a pure pass-through whose
+        # interval primitive makes the exact two clock reads the old
+        # ad-hoc perf_counter arithmetic made (repro.obs.record)
+        rec = Recorder(enabled=obs)
+        t_train0 = rec.clock()
         for i in range(start_step, steps):
             host_batch = next(data)
             dev_batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
-            t0 = time.perf_counter()
-            state, metrics = jitted(state, dev_batch)
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
+            state, metrics, loss, dt = run_timed_step(
+                jitted, state, dev_batch, rec, f"train_step{i}",
+                role="step", step=i,
+            )
             mon.record(host_id, dt)
             hb.beat(host_id, i)
             losses.append(loss)
@@ -439,11 +521,19 @@ def train(
         if ckpt:
             ckpt.save(state, steps)
             ckpt.wait()
-        wall = time.perf_counter() - t_train0
+        wall = rec.clock() - t_train0
         log_fn(
             f"[done] {steps - start_step} steps in {wall:.1f}s; "
             f"loss {losses[0]:.3f} -> {losses[-1]:.3f}"
         )
+        if obs:
+            _obs_report(
+                rec, cfg, plan, mesh, state.params,
+                batch=batch, seq=seq, dp=dp, grad_accum=grad_accum,
+                compression=compression, overlap_buckets=overlap_buckets,
+                netprof_db=netprof_db, trace_out=trace_out,
+                run_spec=run_spec, log_fn=log_fn,
+            )
         return state, losses
 
 
@@ -451,7 +541,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     # shared launch surface lives in repro.launch.spec (one declaration,
     # every driver); only truly train-local knobs are declared here
-    runspec.add_args(ap, "model", "train")
+    runspec.add_args(ap, "model", "train", "obs")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--no-restore", action="store_true")
@@ -506,6 +596,8 @@ def main() -> None:
         overlap_comm=spec.overlap_comm,
         netprof_db=spec.netprof_db or None,
         analyze=spec.analyze,
+        obs=spec.obs,
+        trace_out=spec.trace_out,
         run_spec=spec,
         ckpt_dir=args.ckpt_dir,
         restore_from=not args.no_restore,

@@ -72,6 +72,7 @@ class ServeEngine:
         num_blocks: int = 0,
         mesh=None,
         clock: Callable[[], float] = time.perf_counter,
+        recorder=None,
     ):
         paged.check_family(model.cfg)
         self.model = model
@@ -107,8 +108,17 @@ class ServeEngine:
         )
         self._prefill_cache: dict[int, Callable] = {}
         # duration source only — scheduling time is sched.clock (see module
-        # docstring); injectable for deterministic tests
-        self._clock = clock
+        # docstring); injectable for deterministic tests.  Telemetry goes
+        # through a repro.obs Recorder; without one, a disabled recorder
+        # over the same clock measures step durations through the exact
+        # same two clock reads the ad-hoc arithmetic used to make (the
+        # PR-7 replay parity tests pin this bit-identical).
+        if recorder is None:
+            from repro.obs.record import Recorder
+
+            recorder = Recorder(enabled=False, clock=clock)
+        self._rec = recorder
+        self._clock = recorder.clock
 
     # -- sharding --------------------------------------------------------------
 
@@ -199,7 +209,10 @@ class ServeEngine:
         return True
 
     def _execute(self, plan: StepPlan) -> None:
-        t_start = self._clock()
+        rec = self._rec
+        iv = rec.interval(
+            f"step{plan.index}", "host", kind="serve-step", role="step"
+        )
         scratch = self.sched.scratch_block
         for rid, slot in plan.admitted:
             req = self.requests[rid]
@@ -228,6 +241,7 @@ class ServeEngine:
                 )
             toks = np.zeros((1, pf.bucket), np.int32)
             toks[0, : pf.width] = req.prompt[pf.start : pf.start + pf.width]
+            t0 = rec.clock() if rec.enabled else 0.0
             logits, self.pool = self._prefill_fn(pf.bucket)(
                 self.params, self.pool, jnp.asarray(toks),
                 jnp.int32(pf.start), jnp.int32(pf.width),
@@ -235,6 +249,14 @@ class ServeEngine:
             )
             if pf.final:
                 new_tokens[pf.slot] = int(jnp.argmax(logits[0, -1]))
+            if rec.enabled:
+                jax.block_until_ready(logits)
+                rec.emit(
+                    f"step{plan.index}/prefill"
+                    f"[r{pf.rid}@{pf.start}+{pf.width}]",
+                    "chip", t0, rec.clock(), kind="prefill",
+                    rid=pf.rid, slot=pf.slot, bucket=pf.bucket,
+                )
 
         eos_slots: set[int] = set()
         if plan.decode_slots:
@@ -253,6 +275,7 @@ class ServeEngine:
                 toks[s, 0] = req.output[-1]
                 lengths[s] = state.length
                 tables[s] = self._tables[s]
+            t0 = rec.clock() if rec.enabled else 0.0
             logits, self.pool = self._decode(
                 self.params, self.pool,
                 self._slot_sharded(jnp.asarray(toks)),
@@ -260,6 +283,12 @@ class ServeEngine:
                 self._slot_sharded(jnp.asarray(tables)),
             )
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            if rec.enabled:
+                rec.emit(
+                    f"step{plan.index}/decode[{len(plan.decode_slots)}]",
+                    "chip", t0, rec.clock(), kind="decode",
+                    slots=len(plan.decode_slots),
+                )
             for s in plan.decode_slots:
                 tok = int(nxt[s])
                 new_tokens[s] = tok
@@ -267,7 +296,7 @@ class ServeEngine:
                     eos_slots.add(s)
 
         res = self.sched.commit(plan, frozenset(eos_slots))
-        dur = self._clock() - t_start
+        dur = iv.stop()
         self.sched.advance(dur)
         t_end = self.sched.clock
         self.step_log.append(plan.signature())
@@ -293,6 +322,14 @@ class ServeEngine:
                 if r is not None and r.rid == rid:
                     self.slot_req[s] = None
                     self._tables[s] = scratch
+        if rec.enabled:
+            rec.counter(
+                "kv_free_blocks", "chip", self.sched.allocator.num_free
+            )
+            rec.counter(
+                "live_slots", "chip",
+                sum(r is not None for r in self.slot_req),
+            )
 
     def run_until_done(self, max_steps: int = 100_000) -> list[Request]:
         steps = 0

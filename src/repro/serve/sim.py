@@ -122,11 +122,24 @@ def simulate_serve(
     estimator,
     *,
     name: str = "serve-sim",
+    step_durations: Optional[list[float]] = None,
 ) -> ServeSimResult:
-    """Price a request trace through the serve cost chain (no model runs)."""
+    """Price a request trace through the serve cost chain (no model runs).
+
+    ``step_durations`` switches to *priced replay*: the scheduler clock
+    advances by the engine's measured per-step durations (so, by the
+    :func:`replay_schedule` induction, the step compositions — and hence
+    every node uid — are bit-identical to the engine's), while each
+    planned node is still priced through the estimator into the
+    graph/timeline.  This is the telemetry join mode (``--obs``): the
+    predictive mode admits on *priced* time, so under measurement noise
+    its compositions can lag or lead the engine's by a step and the
+    uid-keyed divergence join would report spurious O001/O002 pairs.
+    """
     graph = DataflowGraph(name)
     events: list[SimEvent] = []
     prev: Optional[int] = None
+    measured = iter(step_durations) if step_durations is not None else None
 
     def price(plan: StepPlan, t0: float) -> float:
         nonlocal prev
@@ -173,7 +186,15 @@ def simulate_serve(
             deps = [node.uid]
         if deps:
             prev = deps[0]
-        return t - t0
+        if measured is None:
+            return t - t0
+        try:
+            return float(next(measured))
+        except StopIteration:
+            raise RuntimeError(
+                "priced replay exhausted the engine's step durations at "
+                f"step {plan.index} — engine and twin step counts diverge"
+            ) from None
 
     records, step_log, durations, makespan = _drive(trace, scfg, price)
     time_by_kind: dict[str, float] = {}

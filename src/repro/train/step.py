@@ -521,3 +521,22 @@ def make_eval_step(model: Model):
         return {"loss": loss, **metrics}
 
     return eval_step
+
+
+def run_timed_step(jitted, state, batch, recorder, name: str, **labels):
+    """Execute one jitted train step under a recorder interval.
+
+    The measurement boundary is the ``float(metrics["loss"])`` host sync —
+    the same boundary the launcher's ad-hoc ``time.perf_counter`` pair
+    used before the recorder existed, and the recorder's interval
+    primitive reads the clock exactly once on each side whether or not
+    recording is enabled, so the measured durations are bit-identical to
+    the old code path (see repro.obs.record).
+
+    Returns ``(state, metrics, loss, dt_seconds)``.
+    """
+    iv = recorder.interval(name, "host", kind="train-step", **labels)
+    state, metrics = jitted(state, batch)
+    loss = float(metrics["loss"])  # host sync: the step is truly done
+    dt = iv.stop()
+    return state, metrics, loss, dt

@@ -417,7 +417,7 @@ def test_diagnostic_code_table_is_append_only_and_documented():
     missing = [c for c in shipped if c not in DIAGNOSTIC_CODES]
     assert not missing, f"shipped codes removed: {missing}"
     for code, desc in DIAGNOSTIC_CODES.items():
-        assert re.fullmatch(r"[GASTR]\d{3}", code), code
+        assert re.fullmatch(r"[GASTRO]\d{3}", code), code
         assert desc.strip(), f"{code} has no description"
     docs = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

@@ -1,0 +1,514 @@
+"""Runtime telemetry: recorder semantics, overlay export, divergence join.
+
+Four layers of guarantees:
+
+* the recorder's structured spans nest/close correctly (SpanError on
+  misuse), the disabled path is a cached no-op, and the ``interval``
+  primitive reads the clock exactly twice whether or not recording is
+  enabled — so instrumented measurements are bit-identical to the ad-hoc
+  ``perf_counter`` arithmetic they replaced;
+* the exported JSON is byte-identical across processes with different
+  ``PYTHONHASHSEED`` values (same convention as the serve determinism
+  gate);
+* the executor span vocabulary (``repro.dist.pp.schedule_span_names``)
+  and the simulated graph's node set are the same names on the same
+  devices — the join key the divergence attributor relies on;
+* the attributor itself: a clean join is silent with full gap
+  attribution, and each O code fires on its tampered corpus.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.simulator import SimEvent, SimResult
+from repro.core.strategy import LayerCost, Strategy, pipeline_graph
+from repro.core.timeline import _device_sort_key, to_chrome_trace
+from repro.dist.pp import schedule_span_names
+from repro.obs import (
+    Counter,
+    Recorder,
+    SpanError,
+    derive_sim_counters,
+    divergence_report,
+    overlay_chrome_trace,
+)
+from repro.obs.record import _NULL_SPAN
+from repro.pricing import PROV_DB
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+class FakeClock:
+    """Deterministic clock: returns 0.0, 1.0, 2.0, ... and counts reads."""
+
+    def __init__(self):
+        self.reads = 0
+
+    def __call__(self) -> float:
+        t = float(self.reads)
+        self.reads += 1
+        return t
+
+
+# -- recorder semantics --------------------------------------------------------
+
+
+def test_nested_spans_record_depth_and_close_order():
+    clk = FakeClock()
+    rec = Recorder(clock=clk)
+    rec.begin("outer", "host")
+    rec.begin("inner", "stage0", kind="fwd", mb=3)
+    rec.end("inner")
+    rec.end("outer")
+    assert [s.name for s in rec.spans] == ["inner", "outer"]
+    inner, outer = rec.spans
+    assert (inner.depth, outer.depth) == (1, 0)
+    assert inner.device == "stage0" and inner.kind == "fwd"
+    assert inner.labels == {"mb": 3}
+    assert outer.start < inner.start < inner.end < outer.end
+    assert rec.open_spans == []
+
+
+def test_mismatched_close_raises():
+    rec = Recorder(clock=FakeClock())
+    rec.begin("a")
+    with pytest.raises(SpanError, match="mismatched"):
+        rec.end("b")
+
+
+def test_end_with_no_open_span_raises():
+    rec = Recorder(clock=FakeClock())
+    with pytest.raises(SpanError, match="no open span"):
+        rec.end("a")
+
+
+def test_export_with_open_span_raises():
+    rec = Recorder(clock=FakeClock())
+    rec.begin("half-open")
+    with pytest.raises(SpanError, match="half-open"):
+        rec.to_events()
+
+
+def test_span_context_manager_matches_begin_end():
+    rec = Recorder(clock=FakeClock())
+    with rec.span("a", "stage1", kind="fwd"):
+        with rec.span("b"):
+            pass
+    assert [(s.name, s.depth) for s in rec.spans] == [("b", 1), ("a", 0)]
+
+
+# -- disabled fast path --------------------------------------------------------
+
+
+def test_disabled_span_returns_cached_singleton():
+    rec = Recorder(enabled=False, clock=FakeClock())
+    assert rec.span("a") is rec.span("b") is _NULL_SPAN
+    with rec.span("a"):
+        pass
+
+
+def test_disabled_recorder_records_nothing_and_never_reads_clock():
+    clk = FakeClock()
+    rec = Recorder(enabled=False, clock=clk)
+    rec.begin("a")
+    rec.end("a")  # no SpanError: disabled end is a no-op, not a close
+    rec.emit("b", "chip", 0.0, 1.0)
+    rec.counter("c", "chip", 5.0)
+    with rec.span("d"):
+        pass
+    assert rec.spans == [] and rec.counters == []
+    assert rec.to_events() == []
+    assert clk.reads == 0
+
+
+def test_interval_reads_clock_exactly_twice_enabled_or_not():
+    for enabled in (True, False):
+        clk = FakeClock()
+        rec = Recorder(enabled=enabled, clock=clk)
+        iv = rec.interval("step", "host", role="step")
+        assert clk.reads == 1
+        dur = iv.stop()
+        assert clk.reads == 2
+        # endpoints are the raw clock readings: bit-identical to the
+        # ad-hoc t1 - t0 arithmetic this primitive replaced
+        assert dur == 1.0
+        assert len(rec.spans) == (1 if enabled else 0)
+
+
+def test_interval_duration_bit_identical_across_enabled_states():
+    """Same scripted clock -> the measured float is the same object-level
+    value with recording on or off (the PR-7 replay-parity invariant)."""
+    times = [0.1234567891234, 0.9876543219876]
+
+    def mk():
+        it = iter(times)
+        return lambda: next(it)
+
+    durs = []
+    for enabled in (True, False):
+        rec = Recorder(enabled=enabled, clock=mk())
+        durs.append(rec.interval("s").stop())
+    assert durs[0] == durs[1] == times[1] - times[0]
+
+
+# -- deterministic export ------------------------------------------------------
+
+_EXPORT_SCRIPT = """
+from repro.obs.record import Recorder
+
+times = iter(float(i) for i in range(100))
+rec = Recorder(clock=lambda: next(times))
+for i in range(3):
+    rec.begin(f"train_step{i}", "host", role="step", step=i)
+    rec.emit(f"F0.{i}", "stage0", 10.0 + i, 10.5 + i, kind="fwd",
+             zeta=1, alpha=2, mid=3)
+    rec.counter("kv_free_blocks", "chip", 40.0 - i)
+    rec.end(f"train_step{i}")
+print(rec.to_json())
+"""
+
+
+def test_export_json_identical_across_hash_seeds():
+    """Byte-identical telemetry JSON across processes with different
+    PYTHONHASHSEED values (dict/label ordering must not leak in)."""
+    outs = []
+    for hash_seed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hash_seed
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run(
+            [sys.executable, "-c", _EXPORT_SCRIPT], env=env,
+            capture_output=True, text=True, timeout=120,
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        outs.append(out.stdout)
+    assert outs[0] == outs[1]
+    doc = json.loads(outs[0])
+    assert doc["schema"] == "repro.obs/1"
+    assert len(doc["spans"]) == 6 and len(doc["counters"]) == 3
+
+
+# -- span vocabulary vs the simulated graph ------------------------------------
+
+
+@pytest.mark.parametrize("schedule,vstages", [
+    ("gpipe", 1), ("1f1b", 1), ("interleaved_1f1b", 2),
+])
+def test_schedule_span_names_match_pipeline_graph(schedule, vstages):
+    """The executor-side vocabulary IS the graph's node set: every
+    compute/send node uid and device, no extras, no omissions."""
+    strat = Strategy(pp=4, microbatches=8, schedule=schedule,
+                     vstages=vstages)
+    g = pipeline_graph(
+        8, LayerCost(fwd_flops=1e6, fwd_bytes=1e4, boundary_bytes=64),
+        strat,
+    )
+    graph_named = {
+        (n.name, n.device) for n in g.nodes
+        if n.kind in ("fwd", "bwd", "collective-permute")
+    }
+    spans = schedule_span_names(strat.make_pipeline_schedule())
+    assert len(spans) == len(set(spans))
+    assert set(spans) == graph_named
+
+
+# -- timeline counter tracks (satellite 1) -------------------------------------
+
+
+def _sim(events):
+    busy: dict[str, float] = {}
+    for e in events:
+        busy[e.device] = busy.get(e.device, 0.0) + (e.end - e.start)
+    return SimResult(
+        makespan=max((e.end for e in events), default=0.0),
+        device_busy=busy, events=events, time_by_kind={},
+    )
+
+
+def test_device_sort_key_orders_compute_slots_links_counters():
+    devs = ["ctr:kv_free", "link:pp", "slot1", "stage1", "chip", "slot0",
+            "stage0", "host", "link:dp0", "weird"]
+    assert sorted(devs, key=_device_sort_key) == [
+        "chip", "host", "stage0", "stage1", "slot0", "slot1",
+        "link:dp0", "link:pp", "weird", "ctr:kv_free",
+    ]
+
+
+def test_to_chrome_trace_emits_counter_tracks():
+    res = _sim([SimEvent(0, "F0.0", "fwd", "stage0", 0.0, 1.0)])
+    trace = to_chrome_trace(
+        res, counters=[Counter("kv_free", "chip", 0.5, 7.0),
+                       ("kv_free", 0.75, 6.0)],
+    )
+    names = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["name"] == "process_name"}
+    assert names == {"stage0", "ctr:kv_free"}
+    cs = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    assert [c["args"]["kv_free"] for c in cs] == [7.0, 6.0]
+    # counter pid sorts after every device pid
+    stage_pid = next(e["pid"] for e in trace["traceEvents"]
+                     if e["ph"] == "X")
+    assert all(c["pid"] > stage_pid for c in cs)
+
+
+# -- overlay export ------------------------------------------------------------
+
+
+def _overlay_fixture():
+    events = [
+        SimEvent(0, "F0.0", "fwd", "stage0", 0.0, 1.0),
+        SimEvent(1, "sendF0.0", "collective-permute", "link:pp", 1.0, 1.2),
+        SimEvent(2, "F1.0", "fwd", "stage1", 1.2, 2.2),
+        SimEvent(3, "B1.0", "bwd", "stage1", 2.2, 4.2),
+        SimEvent(4, "B0.0", "bwd", "stage0", 4.4, 6.4),
+    ]
+    rec = Recorder(clock=FakeClock())
+    # the real side starts at an arbitrary wall-clock offset
+    rec.emit("F0.0", "stage0", 100.0, 101.1, kind="fwd")
+    rec.emit("F1.0", "stage1", 101.3, 102.5, kind="fwd")
+    rec.counter("live_slots", "chip", 2.0, t=100.5)
+    return _sim(events), rec
+
+
+def test_overlay_tracks_sim_above_real_per_device():
+    res, rec = _overlay_fixture()
+    trace = overlay_chrome_trace(res, rec)
+    label_by_pid = {
+        e["pid"]: e["args"]["name"] for e in trace["traceEvents"]
+        if e["name"] == "process_name"
+    }
+    labels = [label_by_pid[p] for p in sorted(label_by_pid)]
+    # same device adjacent, sim first; counter tracks last
+    assert labels.index("sim:stage0") + 1 == labels.index("real:stage0")
+    assert labels.index("sim:stage1") + 1 == labels.index("real:stage1")
+    assert labels[-1].startswith(("sim:ctr:", "real:ctr:"))
+    assert "real:ctr:live_slots" in labels
+
+
+def test_overlay_sides_t0_normalized_independently():
+    res, rec = _overlay_fixture()
+    trace = overlay_chrome_trace(res, rec)
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    label_by_pid = {
+        e["pid"]: e["args"]["name"] for e in trace["traceEvents"]
+        if e["name"] == "process_name"
+    }
+    sim_ts = [e["ts"] for e in xs if label_by_pid[e["pid"]].startswith("sim:")]
+    real_ts = [e["ts"] for e in xs
+               if label_by_pid[e["pid"]].startswith("real:")]
+    assert min(sim_ts) == 0.0 and min(real_ts) == 0.0
+    # the real 100s offset must not survive normalization
+    assert max(real_ts) < 10e6
+
+
+def test_overlay_attaches_provenance_and_labels_as_args():
+    res, rec = _overlay_fixture()
+    g = pipeline_graph(
+        2, LayerCost(fwd_flops=1e6, fwd_bytes=1e4, boundary_bytes=64),
+        Strategy(pp=2, microbatches=1),
+    )
+    for n in g.nodes:
+        n.meta["time_provenance"] = PROV_DB
+    trace = overlay_chrome_trace(res, rec, graph=g)
+    by_name: dict[str, list] = {}
+    for e in trace["traceEvents"]:
+        if e["ph"] == "X":
+            by_name.setdefault(e["name"], []).append(e)
+    send = by_name["sendF0.0"][0]
+    assert send["args"]["time_provenance"] == PROV_DB
+    assert send["args"]["comm_bytes"] == 64
+    real_f = [e for e in by_name["F0.0"] if "args" not in e or
+              "time_provenance" not in e.get("args", {})]
+    assert real_f, "real span lost its own event"
+
+
+def test_derive_sim_counters_tracks_inflight_and_link_concurrency():
+    res, _ = _overlay_fixture()
+    ctrs = derive_sim_counters(res)
+    inflight = [(c.t, c.value) for c in ctrs
+                if c.name == "inflight_microbatches"]
+    # one microbatch: +1 at first F start, -1 at last B end
+    assert inflight == [(0.0, 1.0), (6.4, 0.0)]
+    link = [(c.t, c.value) for c in ctrs if c.name == "link_concurrency"]
+    assert link == [(1.0, 1.0), (1.2, 0.0)]
+
+
+def test_overlay_real_only_is_valid():
+    _, rec = _overlay_fixture()
+    trace = overlay_chrome_trace(None, rec)
+    assert any(e["ph"] == "X" for e in trace["traceEvents"])
+
+
+# -- divergence attribution (tamper corpus) ------------------------------------
+
+
+def _joined_fixture():
+    """Real and sim sides that join perfectly on 3 uids."""
+    events = [
+        SimEvent(0, "F0.0", "fwd", "stage0", 0.0, 1.0),
+        SimEvent(1, "sendF0.0", "collective-permute", "link:pp", 1.0, 1.5),
+        SimEvent(2, "B0.0", "bwd", "stage0", 1.5, 3.5),
+    ]
+    spans = [
+        {"name": "F0.0", "device": "stage0", "start": 0.0, "end": 1.2,
+         "kind": "fwd", "labels": {}},
+        {"name": "sendF0.0", "device": "link:pp", "start": 1.2, "end": 1.8,
+         "kind": "collective-permute", "labels": {}},
+        {"name": "B0.0", "device": "stage0", "start": 1.8, "end": 4.0,
+         "kind": "bwd", "labels": {}},
+    ]
+    return _sim(events), spans
+
+
+def _codes(report):
+    return sorted(d.code for d in report.findings)
+
+
+def test_clean_join_full_attribution_no_warnings():
+    res, spans = _joined_fixture()
+    rep = divergence_report(spans, res)
+    assert _codes(rep) == ["O000"]
+    assert rep.ok
+    m = rep.metrics
+    assert m["obs_gap_attributed_frac"] == 1.0
+    assert m["obs_joined_ops"] == 3.0
+    assert m["obs_unmatched_real"] == m["obs_unmatched_sim"] == 0.0
+    assert m["obs_gap_s"] == pytest.approx(4.0 - 3.5)
+    rows = rep.extras["obs_diff"]["rows"]
+    assert rows[0]["abs_err_s"] == max(r["abs_err_s"] for r in rows)
+
+
+def test_bogus_real_span_fires_o001():
+    res, spans = _joined_fixture()
+    spans.append({"name": "mystery_op", "device": "stage0",
+                  "start": 4.0, "end": 4.5, "kind": "fwd", "labels": {}})
+    rep = divergence_report(spans, res)
+    o1 = [d for d in rep.findings if d.code == "O001"]
+    assert len(o1) == 1 and "mystery_op" in o1[0].message
+    assert rep.metrics["obs_gap_attributed_frac"] < 1.0
+
+
+def test_unobserved_sim_node_fires_o002():
+    res, spans = _joined_fixture()
+    del spans[1]  # the send was never measured
+    rep = divergence_report(spans, res)
+    o2 = [d for d in rep.findings if d.code == "O002"]
+    assert len(o2) == 1 and "sendF0.0" in o2[0].message
+    assert rep.metrics["obs_unmatched_sim"] == 1.0
+
+
+def test_class_error_over_tolerance_fires_o003():
+    res, spans = _joined_fixture()
+    g = pipeline_graph(
+        2, LayerCost(fwd_flops=1e6, fwd_bytes=1e4, boundary_bytes=64),
+        Strategy(pp=2, microbatches=1),
+    )
+    for n in g.nodes:
+        n.meta["time_provenance"] = PROV_DB
+    spans[0]["end"] = spans[0]["start"] + 50.0  # 50x the priced second
+    rep = divergence_report(spans, res, g)
+    o3 = [d for d in rep.findings if d.code == "O003"]
+    assert len(o3) == 1 and PROV_DB in o3[0].message
+    # same corpus under a loose bound is silent
+    rep2 = divergence_report(spans, res, g,
+                             class_tolerances={PROV_DB: 100.0})
+    assert not [d for d in rep2.findings if d.code == "O003"]
+
+
+def test_structural_step_spans_excluded_from_join():
+    res, spans = _joined_fixture()
+    spans.append({"name": "train_step0", "device": "host",
+                  "start": 0.0, "end": 9.0, "kind": "train-step",
+                  "labels": {"role": "step"}})
+    rep = divergence_report(spans, res)
+    assert not [d for d in rep.findings if d.code == "O001"]
+    assert rep.metrics["obs_step_total_s"] == pytest.approx(9.0)
+    # the step wrapper's dispatch overhead never enters the op gap
+    assert rep.metrics["obs_measured_s"] == pytest.approx(4.0)
+
+
+def test_o001_findings_capped_with_overflow_summary():
+    res, spans = _joined_fixture()
+    for i in range(12):
+        spans.append({"name": f"ghost{i}", "device": "host",
+                      "start": 5.0 + i, "end": 5.5 + i, "kind": "x",
+                      "labels": {}})
+    rep = divergence_report(spans, res)
+    o1 = [d for d in rep.findings if d.code == "O001"]
+    assert len(o1) == 9  # 8 itemized + 1 overflow summary
+    assert "4 more" in o1[-1].message
+    assert rep.metrics["obs_unmatched_real"] == 12.0
+
+
+def test_divergence_report_accepts_recorder():
+    res, _ = _joined_fixture()
+    rec = Recorder(clock=FakeClock())
+    rec.emit("F0.0", "stage0", 0.0, 1.1, kind="fwd")
+    rec.emit("sendF0.0", "link:pp", 1.1, 1.6, kind="collective-permute")
+    rec.emit("B0.0", "stage0", 1.6, 3.7, kind="bwd")
+    rep = divergence_report(rec, res)
+    assert rep.metrics["obs_joined_ops"] == 3.0
+    assert rep.metrics["obs_gap_attributed_frac"] == 1.0
+
+
+def test_divergence_report_importable_from_analysis():
+    """The lazy re-export keeps the analysis facade circular-import-safe."""
+    import repro.analysis as analysis
+
+    assert analysis.divergence_report is divergence_report
+
+
+# -- bench_gate drift table (satellite 2) --------------------------------------
+
+
+def _bench_gate():
+    sys.path.insert(0, os.path.join(REPO, "scripts"))
+    try:
+        import bench_gate
+    finally:
+        sys.path.pop(0)
+    return bench_gate
+
+
+def test_drift_table_statuses_cover_all_transitions():
+    bg = _bench_gate()
+    baseline = {
+        "ok_metric": {"value": 10.0, "tol_abs": 1.0},
+        "fail_metric": {"value": 5.0, "tol_rel": 0.1},
+        "gone_metric": {"value": 1.0},
+    }
+    current = {
+        "ok_metric": {"value": 10.5},
+        "fail_metric": {"value": 6.0},
+        "new_metric": {"value": 3.0},
+    }
+    rows = {r["name"]: r for r in bg.drift_table(current, baseline)}
+    assert rows["ok_metric"]["status"] == "ok"
+    assert rows["fail_metric"]["status"] == "fail"
+    assert rows["gone_metric"]["status"] == "missing"
+    assert rows["new_metric"]["status"] == "new"
+    assert rows["fail_metric"]["diff"] == pytest.approx(1.0)
+    assert rows["fail_metric"]["tol"] == pytest.approx(0.5)
+    # --smoke mode downgrades missing to skipped
+    smoke = {r["name"]: r for r in
+             bg.drift_table(current, baseline, allow_missing=True)}
+    assert smoke["gone_metric"]["status"] == "skipped"
+    # compare() derives its verdict from the same rows
+    failures = bg.compare(current, baseline,
+                          rows=list(rows.values()))
+    assert len(failures) == 2  # fail_metric + gone_metric
+
+
+def test_render_drift_aligned_table():
+    bg = _bench_gate()
+    rows = bg.drift_table({"m": {"value": 2.0}},
+                          {"m": {"value": 1.0, "tol_abs": 0.5}})
+    out = bg.render_drift(rows)
+    lines = out.splitlines()
+    assert lines[0].startswith("metric")
+    assert set(lines[1]) <= {"-", " "}
+    assert "fail" in lines[2]
+    assert len({len(l) for l in lines[:2]}) == 1

@@ -283,6 +283,33 @@ def test_replay_rejects_short_duration_list():
         replay_schedule(trace, scfg, [1e-3])
 
 
+def test_priced_replay_pins_compositions_to_measured_clock():
+    """simulate_serve(step_durations=...) — the --obs join mode — must
+    reproduce the measured-clock compositions exactly (same induction as
+    replay_schedule) while the timeline still carries priced durations."""
+    scfg = ServeConfig(slots=2, max_len=64, block_size=8, chunk=8)
+    est, _ = _synthetic_setup(scfg)
+    trace = poisson_trace(6, 40.0, seed=3)
+    predictive = simulate_serve(trace, _SMOKE, scfg, est)
+    # a measured clock 50x slower than the priced one shifts admissions,
+    # so the predictive twin's compositions diverge — priced replay's don't
+    measured = [50.0 * d for d in predictive.step_durations]
+    replay = replay_schedule(trace, scfg, measured)
+    priced = simulate_serve(trace, _SMOKE, scfg, est,
+                            step_durations=measured)
+    assert priced.step_log == replay.step_log
+    assert priced.step_durations == replay.step_durations
+    assert priced.step_durations == measured[:len(priced.step_durations)]
+    assert priced.latency == replay.latency
+    # the graph/timeline side is PRICED, not the measured durations
+    names = {e.name for e in priced.timeline.events}
+    assert names == {n.name for n in priced.graph.nodes}
+    priced_total = sum(e.end - e.start for e in priced.timeline.events)
+    assert 0.0 < priced_total < 0.5 * sum(measured)
+    with pytest.raises(RuntimeError, match="step counts diverge"):
+        simulate_serve(trace, _SMOKE, scfg, est, step_durations=measured[:2])
+
+
 # -- provenance + audit --------------------------------------------------------
 
 
